@@ -1,0 +1,59 @@
+"""Shared benchmark plumbing: subprocess workers, result IO, tables."""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+RESULTS = os.path.join(REPO, "results", "bench")
+
+SCALE = os.environ.get("REPRO_BENCH_SCALE", "smoke")  # smoke | full
+
+
+def run_worker(devices: int = 1, timeout: int = 3600, **kwargs) -> dict:
+    """Run one benchmarks.worker job in a fresh process; return its JSON."""
+    cmd = [sys.executable, "-m", "benchmarks.worker"]
+    for k, v in kwargs.items():
+        cmd += [f"--{k}", str(v)]
+    env = dict(
+        os.environ,
+        REPRO_DEVICES=str(devices),
+        PYTHONPATH=os.path.join(REPO, "src") + ":" + REPO,
+    )
+    out = subprocess.run(
+        cmd, capture_output=True, text=True, env=env, cwd=REPO,
+        timeout=timeout,
+    )
+    if out.returncode != 0:
+        raise RuntimeError(
+            f"worker failed ({' '.join(cmd)}):\n{out.stderr[-4000:]}"
+        )
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def save(name: str, payload) -> str:
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    return path
+
+
+def load(name: str):
+    path = os.path.join(RESULTS, f"{name}.json")
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def relative(values: list[float]) -> list[float]:
+    base = values[0] if values and values[0] else 1.0
+    return [v / base for v in values]

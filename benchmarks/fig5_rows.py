@@ -1,0 +1,56 @@
+"""Paper Fig. 5 — mRMR scalability across the number of ROWS.
+
+Paper setting: conventional encoding, 1 000 columns, rows 1M→10M, select 10
+features, 10 nodes.  Paper claim: execution time is LINEAR in the number of
+rows ("as expected by MapReduce design").
+
+CPU adaptation (single-core container): rows are scaled down (the claim is
+about the *slope*, which is size-independent for a fixed per-pass cost
+model); the cluster is 8 forced host devices in a subprocess.  Both the
+paper-faithful recompute and the beyond-paper incremental variant run.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SCALE, csv_row, relative, run_worker, save
+
+POINTS = {
+    "smoke": dict(rows=[20_000, 40_000, 80_000, 160_000], cols=500,
+                  select=10, devices=8, repeats=3),
+    "full": dict(rows=[125_000, 500_000, 875_000, 1_250_000], cols=1000,
+                 select=10, devices=8, repeats=3),
+}
+
+
+def main() -> dict:
+    p = POINTS[SCALE]
+    out = {"figure": "fig5_rows", "scale": SCALE, "points": []}
+    for variant, inc in (("paper-faithful", 0), ("incremental", 1)):
+        for rows in p["rows"]:
+            rec = run_worker(
+                devices=p["devices"], rows=rows, cols=p["cols"],
+                select=p["select"], encoding="conventional",
+                incremental=inc, repeats=p["repeats"],
+            )
+            rec["variant"] = variant
+            out["points"].append(rec)
+            csv_row(
+                f"fig5/{variant}/rows={rows}",
+                rec["mean_s"] * 1e6,
+                f"hits={rec['relevant_hits']}/9",
+            )
+    # linearity check (paper claim): relative ET vs relative rows
+    for variant in ("paper-faithful", "incremental"):
+        pts = [q for q in out["points"] if q["variant"] == variant]
+        rel_t = relative([q["mean_s"] for q in pts])
+        rel_r = relative([float(q["rows"]) for q in pts])
+        out[f"relative_et_{variant}"] = rel_t
+        out[f"relative_rows"] = rel_r
+        print(f"fig5 {variant}: rel rows {rel_r} -> rel ET "
+              f"{[round(t, 2) for t in rel_t]} (paper: linear)")
+    save("fig5_rows", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

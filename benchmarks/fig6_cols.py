@@ -1,0 +1,50 @@
+"""Paper Fig. 6 — mRMR scalability across the number of COLUMNS.
+
+Paper setting: conventional encoding, 1M rows, columns 100→1000, select 10,
+10 nodes.  Paper claim: SUPERLINEAR relative execution time in the number of
+columns (each extra column adds both relevance and redundancy passes).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import SCALE, csv_row, relative, run_worker, save
+
+POINTS = {
+    "smoke": dict(rows=100_000, cols=[128, 256, 512, 1024], select=10,
+                  devices=8, repeats=3),
+    "full": dict(rows=1_000_000, cols=[100, 400, 700, 1000], select=10,
+                 devices=8, repeats=3),
+}
+
+
+def main() -> dict:
+    p = POINTS[SCALE]
+    out = {"figure": "fig6_cols", "scale": SCALE, "points": []}
+    for variant, inc in (("paper-faithful", 0), ("incremental", 1)):
+        for cols in p["cols"]:
+            rec = run_worker(
+                devices=p["devices"], rows=p["rows"], cols=cols,
+                select=p["select"], encoding="conventional",
+                incremental=inc, repeats=p["repeats"],
+            )
+            rec["variant"] = variant
+            out["points"].append(rec)
+            csv_row(
+                f"fig6/{variant}/cols={cols}",
+                rec["mean_s"] * 1e6,
+                f"hits={rec['relevant_hits']}/9",
+            )
+    for variant in ("paper-faithful", "incremental"):
+        pts = [q for q in out["points"] if q["variant"] == variant]
+        rel_t = relative([q["mean_s"] for q in pts])
+        rel_c = relative([float(q["cols"]) for q in pts])
+        out[f"relative_et_{variant}"] = rel_t
+        out["relative_cols"] = rel_c
+        print(f"fig6 {variant}: rel cols {rel_c} -> rel ET "
+              f"{[round(t, 2) for t in rel_t]} (paper: superlinear)")
+    save("fig6_cols", out)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,151 @@
+"""Cell C of the §Perf hillclimb: the paper's own mRMR job on the
+production mesh (dry-run: lower + compile + roofline terms).
+
+The paper's largest conventional-encoding workload — 10M rows × 1 000
+binary columns, select L=10 — is sharded over all 256 chips of the single
+pod (observation axes = ('data','model'), the MapReduce row-chunking) and
+over 512 chips of the two-pod mesh.  Variants:
+
+  paper      — paper-faithful recomputation (O(N·L²) pair scores)
+  incremental— running redundancy sums (O(N·L)), identical selections
+  f32onehot  — incremental, but f32 one-hot materialisation (pre-C2)
+
+    PYTHONPATH=src python -m benchmarks.mrmr_dryrun [--rows 10000000] ...
+"""
+
+import os
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_analysis import analyze_hlo
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.core.mrmr import make_conventional_fn
+from repro.core.scores import MIScore
+from repro.launch.mesh import make_production_mesh
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+
+def model_flops_mrmr(rows: int, cols: int, select: int, v: int, c: int,
+                     incremental: bool) -> float:
+    """Useful one-hot-matmul work: 2·M·N·V·C per scoring pass."""
+    passes = (1 + select) if incremental else (1 + select * (select + 1) / 2)
+    return 2.0 * rows * cols * v * c * passes
+
+
+VARIANTS = {
+    # name -> (incremental, onehot_dtype, static_inner)
+    "paper": (False, jnp.float32, True),
+    "incremental": (True, jnp.float32, False),
+    "bf16onehot": (True, jnp.bfloat16, False),
+}
+
+
+def run_variant(name: str, mesh_kind: str, rows: int, cols: int, select: int,
+                incremental: bool, block: int) -> dict:
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    obs_axes = tuple(mesh.axis_names)  # rows sharded over every axis
+    score = MIScore(num_values=2, num_classes=2)
+    inc, oh_dt, static_inner = VARIANTS.get(
+        name, (incremental, jnp.bfloat16, False)
+    )
+    fn = make_conventional_fn(
+        select, score, mesh=mesh, obs_axes=obs_axes,
+        incremental=inc, block=block, onehot_dtype=oh_dt,
+        static_inner=static_inner,
+    )
+    incremental = inc
+    pad_rows = -(-rows // mesh.size) * mesh.size
+    X = jax.ShapeDtypeStruct((pad_rows, cols), jnp.int8)
+    y = jax.ShapeDtypeStruct((pad_rows,), jnp.int8)
+    fn = jax.jit(
+        fn,
+        in_shardings=(
+            NamedSharding(mesh, P(obs_axes, None)),
+            NamedSharding(mesh, P(obs_axes)),
+        ),
+    )
+    t0 = time.time()
+    compiled = fn.lower(X, y).compile()
+    dt = time.time() - t0
+    hc = analyze_hlo(compiled.as_text(), bf16_model=False)
+    mem = compiled.memory_analysis()
+    n = mesh.size
+    mf = model_flops_mrmr(rows, cols, select, 2, 2, incremental)
+    terms = {
+        "compute_s": hc["flops"] / PEAK_FLOPS,
+        "memory_s": hc["bytes"] / HBM_BW,
+        "collective_s": hc["collectives"]["operand_bytes"] / ICI_BW,
+    }
+    dom = max(terms, key=terms.get)
+    rec = dict(
+        variant=name, mesh=mesh_kind, rows=rows, cols=cols, select=select,
+        incremental=incremental, block=block, n_devices=n,
+        compile_s=round(dt, 1),
+        flops_per_device=hc["flops"],
+        bytes_per_device=hc["bytes"],
+        collective_operand_bytes=hc["collectives"]["operand_bytes"],
+        collective_by_type={
+            k: v["operand_bytes"]
+            for k, v in hc["collectives"]["by_type"].items()
+        },
+        roofline={**terms, "dominant": dom,
+                  "model_flops": mf,
+                  "hlo_flops_global": hc["flops"] * n,
+                  "useful_flops_ratio": mf / (hc["flops"] * n) if hc["flops"] else 0,
+                  },
+        hbm_bytes=int(getattr(mem, "temp_size_in_bytes", 0) or 0)
+        + int(getattr(mem, "argument_size_in_bytes", 0) or 0),
+    )
+    print(
+        f"mrmr/{name:<12s} {mesh_kind:<6s} comp={terms['compute_s']:9.3e}s "
+        f"mem={terms['memory_s']:9.3e}s coll={terms['collective_s']:9.3e}s "
+        f"dom={dom[:-2]:<10s} useful={rec['roofline']['useful_flops_ratio']:5.2f} "
+        f"compile={dt:.0f}s", flush=True,
+    )
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rows", type=int, default=10_000_000)
+    ap.add_argument("--cols", type=int, default=1000)
+    ap.add_argument("--select", type=int, default=10)
+    ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--variants", default="paper,incremental,bf16onehot")
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    recs = []
+    for mesh_kind in meshes:
+        for v in args.variants.split(","):
+            recs.append(
+                run_variant(
+                    v, mesh_kind, args.rows, args.cols, args.select,
+                    incremental=(v != "paper"), block=args.block,
+                )
+            )
+    out = os.path.join(os.path.abspath(OUT), "mrmr_cells.json")
+    os.makedirs(os.path.dirname(out), exist_ok=True)
+    existing = []
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
+    keyed = {(r["variant"], r["mesh"]): r for r in existing}
+    for r in recs:
+        keyed[(r["variant"], r["mesh"])] = r
+    with open(out, "w") as f:
+        json.dump(list(keyed.values()), f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

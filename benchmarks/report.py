@@ -1,0 +1,182 @@
+"""Regenerate the data-driven sections of EXPERIMENTS.md.
+
+Reads ``results/dryrun/{single,multi}/*.json`` (LM cells),
+``results/dryrun/mrmr_cells.json`` (paper cells) and ``results/bench/*.json``
+(paper figures) and rewrites the blocks between
+``<!-- AUTOGEN:<name> -->`` / ``<!-- /AUTOGEN:<name> -->`` markers.
+
+    PYTHONPATH=src:. python -m benchmarks.report
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import re
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+DOC = os.path.join(REPO, "EXPERIMENTS.md")
+
+
+def _load_cells(mesh: str) -> list[dict]:
+    out = []
+    for f in sorted(glob.glob(os.path.join(REPO, "results/dryrun", mesh, "*.json"))):
+        if "__" in os.path.basename(f).replace(".json", "").split("__")[-1]:
+            pass
+        with open(f) as fh:
+            r = json.load(fh)
+        if "overrides" in r or r.get("mesh") != mesh:
+            continue  # hillclimb variants are reported in §Perf, not here
+        base = os.path.basename(f)[:-5]
+        if base.count("__") != 1:
+            continue  # tagged variant file
+        out.append(r)
+    return out
+
+
+def _fmt(x: float) -> str:
+    return f"{x:.3e}"
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = [
+        "| arch | shape | step | HBM/dev | flops/dev | bytes/dev | coll bytes/dev | compile |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in _load_cells(mesh):
+        if r["status"] == "skipped":
+            rows.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | — | SKIP (sub-quadratic-only cell) |"
+            )
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | |")
+            continue
+        mem = r.get("memory", {}).get("total_hbm_bytes", 0)
+        rows.append(
+            "| {a} | {s} | {k} | {m:.2f} GiB | {f} | {b} | {c} | {t:.0f}s |".format(
+                a=r["arch"], s=r["shape"], k=r["step_kind"],
+                m=mem / 2**30,
+                f=_fmt(r["cost"]["flops"]), b=_fmt(r["cost"]["bytes"]),
+                c=_fmt(r["collectives"]["operand_bytes"]),
+                t=r["compile_s"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def roofline_table() -> str:
+    rows = [
+        "| arch | shape | compute_s | memory_s | collective_s | dominant | model TFLOP | useful | MFU-bound |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in _load_cells("single"):
+        if r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        rows.append(
+            "| {a} | {s} | {c} | {m} | {co} | {d} | {mf:.1f} | {u:.2f} | {b:.3f} |".format(
+                a=r["arch"], s=r["shape"],
+                c=_fmt(ro["compute_s"]), m=_fmt(ro["memory_s"]),
+                co=_fmt(ro["collective_s"]), d=ro["dominant"][:-2],
+                mf=ro["model_flops"] / 1e12, u=ro["useful_flops_ratio"],
+                b=ro["roofline_mfu_bound"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def mrmr_table() -> str:
+    path = os.path.join(REPO, "results/dryrun/mrmr_cells.json")
+    if not os.path.exists(path):
+        return "(run benchmarks/mrmr_dryrun.py)"
+    with open(path) as f:
+        recs = json.load(f)
+    rows = [
+        "| variant | mesh | compute_s | memory_s | collective_s | dominant | useful |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    order = {"paper": 0, "incremental": 1, "bf16onehot": 2}
+    for r in sorted(recs, key=lambda r: (r["mesh"], order.get(r["variant"], 9))):
+        ro = r["roofline"]
+        rows.append(
+            "| {v} | {m} | {c} | {me} | {co} | {d} | {u:.2f} |".format(
+                v=r["variant"], m=r["mesh"], c=_fmt(ro["compute_s"]),
+                me=_fmt(ro["memory_s"]), co=_fmt(ro["collective_s"]),
+                d=ro["dominant"][:-2], u=ro["useful_flops_ratio"],
+            )
+        )
+    return "\n".join(rows)
+
+
+def bench_tables() -> str:
+    out = []
+    for name in ("fig5_rows", "fig6_cols", "fig7_selected", "fig8_nodes",
+                 "fig9_encodings", "kernels"):
+        path = os.path.join(REPO, "results/bench", f"{name}.json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        out.append(f"**{name}** (scale={r.get('scale')})")
+        out.append("")
+        pts = r.get("points", [])
+        if name == "fig8_nodes":
+            out.append("| nodes | mean_s | wall gain | structural gain (flops/dev) | coll bytes/dev |")
+            out.append("|---|---|---|---|---|")
+            for i, p in enumerate(pts):
+                out.append(
+                    f"| {p['devices']} | {p['mean_s']:.3f} | {r['wall_gain'][i]} | "
+                    f"{r['structural_gain_flops'][i]} | {p['hlo']['collective_operand_bytes']:.2e} |"
+                )
+        elif name == "kernels":
+            out.append("| kernel | mean_s | throughput |")
+            out.append("|---|---|---|")
+            for p in pts:
+                thr = f"{p.get('flops_per_s', 0)/1e9:.1f} GFLOP/s" if p.get("flops_per_s") else ""
+                out.append(f"| {p['name']} | {p['s']:.4f} | {thr} |")
+        else:
+            key = {"fig5_rows": "rows", "fig6_cols": "cols",
+                   "fig7_selected": "select", "fig9_encodings": "variant"}[name]
+            out.append(f"| {key} | variant | mean_s | relevant hits |")
+            out.append("|---|---|---|---|")
+            for p in pts:
+                out.append(
+                    f"| {p.get(key)} | {p.get('variant', p.get('encoding'))} | "
+                    f"{p['mean_s']:.3f} | {p['relevant_hits']} |"
+                )
+        for k in ("relative_et_paper-faithful", "relative_et_incremental",
+                  "conventional_over_alternative"):
+            if k in r:
+                v = r[k]
+                v = [round(x, 2) for x in v] if isinstance(v, list) else v
+                out.append(f"- {k}: {v}")
+        out.append("")
+    return "\n".join(out)
+
+
+def inject(doc: str, name: str, content: str) -> str:
+    pat = re.compile(
+        rf"(<!-- AUTOGEN:{name} -->)(.*?)(<!-- /AUTOGEN:{name} -->)", re.S
+    )
+    if not pat.search(doc):
+        raise SystemExit(f"marker AUTOGEN:{name} missing in EXPERIMENTS.md")
+    return pat.sub(lambda m: f"{m.group(1)}\n{content}\n{m.group(3)}", doc)
+
+
+def main() -> None:
+    with open(DOC) as f:
+        doc = f.read()
+    doc = inject(doc, "dryrun_single", dryrun_table("single"))
+    doc = inject(doc, "dryrun_multi", dryrun_table("multi"))
+    doc = inject(doc, "roofline", roofline_table())
+    doc = inject(doc, "mrmr_cells", mrmr_table())
+    doc = inject(doc, "bench", bench_tables())
+    with open(DOC, "w") as f:
+        f.write(doc)
+    print("EXPERIMENTS.md regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Benchmark harness entry point — one suite per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run``            (smoke scale, default)
+``REPRO_BENCH_SCALE=full python -m benchmarks.run``    (paper-scale inputs)
+``python -m benchmarks.run --only fig5_rows,fig8_nodes``
+
+Prints ``name,us_per_call,derived`` CSV rows per point and writes JSON under
+``results/bench/``; EXPERIMENTS.md tables are regenerated from those files
+by ``benchmarks/report.py``.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+import traceback
+
+from benchmarks import (
+    bench_kernels,
+    fig5_rows,
+    fig6_cols,
+    fig7_selected,
+    fig8_nodes,
+    fig9_encodings,
+)
+
+SUITES = {
+    "fig5_rows": fig5_rows.main,
+    "fig6_cols": fig6_cols.main,
+    "fig7_selected": fig7_selected.main,
+    "fig8_nodes": fig8_nodes.main,
+    "fig9_encodings": fig9_encodings.main,
+    "kernels": bench_kernels.main,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names (default: all)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(SUITES)
+    failed = []
+    print("name,us_per_call,derived")
+    for name in names:
+        t0 = time.time()
+        try:
+            SUITES[name]()
+            print(f"# suite {name} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception:
+            failed.append(name)
+            print(f"# suite {name} FAILED:\n{traceback.format_exc()}")
+    if failed:
+        raise SystemExit(f"failed suites: {failed}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""mRMR as a first-class data-pipeline stage in front of model training.
+
+    PYTHONPATH=src python examples/feature_selection_pipeline.py
+
+The paper's motivating workflow: a wide dataset (more features than
+observations) is reduced with distributed mRMR, then a downstream model is
+trained on the selected columns.  We train the same logistic-regression
+head (in JAX, AdamW) on (a) all features, (b) mRMR-selected, (c) randomly
+selected — showing mRMR keeps accuracy at a fraction of the width.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.selection import FeatureSelector
+from repro.core.scores import PearsonMIScore
+from repro.data.synthetic import continuous_wide_dataset
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+N_OBS, N_FEAT, K = 2_000, 8_192, 16
+
+
+def train_head(Xtr, ytr, Xte, yte, steps=300, lr=0.05):
+    key = jax.random.PRNGKey(0)
+    w = {
+        "w": jax.random.normal(key, (Xtr.shape[1],)) * 0.01,
+        "b": jnp.zeros(()),
+    }
+    cfg = AdamWConfig(learning_rate=lr, weight_decay=1e-4)
+    opt = adamw_init(w, cfg)
+
+    def loss_fn(w, X, y):
+        z = X @ w["w"] + w["b"]
+        return jnp.mean(jnp.logaddexp(0.0, z) - y * z)
+
+    @jax.jit
+    def step(w, opt, X, y):
+        g = jax.grad(loss_fn)(w, X, y)
+        w, opt, _ = adamw_update(g, opt, w, cfg)
+        return w, opt
+
+    for _ in range(steps):
+        w, opt = step(w, opt, Xtr, ytr)
+    acc = jnp.mean(((Xte @ w["w"] + w["b"]) > 0) == (yte > 0.5))
+    return float(acc)
+
+
+def main():
+    X, y = continuous_wide_dataset(N_OBS, N_FEAT, seed=1)
+    X, y = np.asarray(X), np.asarray(y, np.float32)
+    ntr = int(0.8 * N_OBS)
+    Xtr, Xte, ytr, yte = X[:ntr], X[ntr:], y[:ntr], y[ntr:]
+
+    # feature selection sees only the training split (no leakage)
+    fs = FeatureSelector(num_select=K, layout="alternative",
+                         score=PearsonMIScore()).fit(Xtr, ytr)
+    sel = np.asarray(fs.selected_)
+    rng = np.random.default_rng(0)
+    rand = rng.choice(N_FEAT, size=K, replace=False)
+
+    acc_all = train_head(jnp.asarray(Xtr), jnp.asarray(ytr),
+                         jnp.asarray(Xte), jnp.asarray(yte))
+    acc_sel = train_head(jnp.asarray(Xtr[:, sel]), jnp.asarray(ytr),
+                         jnp.asarray(Xte[:, sel]), jnp.asarray(yte))
+    acc_rnd = train_head(jnp.asarray(Xtr[:, rand]), jnp.asarray(ytr),
+                         jnp.asarray(Xte[:, rand]), jnp.asarray(yte))
+
+    print(f"selected (mRMR/Pearson): {sorted(sel.tolist())}")
+    print(f"test acc — all {N_FEAT} features: {acc_all:.3f}")
+    print(f"test acc — {K} mRMR features:     {acc_sel:.3f}")
+    print(f"test acc — {K} random features:   {acc_rnd:.3f}")
+    assert acc_sel > acc_rnd + 0.05, "mRMR should beat random selection"
+
+
+if __name__ == "__main__":
+    main()

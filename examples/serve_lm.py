@@ -1,0 +1,50 @@
+"""Serve a small model with batched requests through ServeEngine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Requests with different prompt lengths are bucketed into waves; decode is a
+jitted one-token step with the KV cache donated (steady-state decode
+allocates nothing).  Works for every decoder-only family — swap --arch for
+'mamba2-1.3b' to serve the SSM (state cache instead of KV).
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.models.model import build_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch)
+    bundle = build_model(cfg, mesh=None)
+    params = jax.jit(bundle.init)(jax.random.PRNGKey(0))
+    engine = ServeEngine(bundle, params, temperature=args.temperature)
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(prompt=rng.integers(0, cfg.vocab_size, size=n).tolist(),
+                max_new_tokens=12)
+        for n in (8, 8, 8, 16, 16, 24, 24, 24)
+    ]
+    t0 = time.time()
+    outs = engine.serve(reqs)
+    dt = time.time() - t0
+    for i, (r, o) in enumerate(zip(reqs, outs)):
+        print(f"req {i}: prompt_len={len(r.prompt):>2d} -> {o}")
+    n_new = sum(len(o) for o in outs)
+    print(f"{len(reqs)} requests / {n_new} new tokens in {dt:.2f}s "
+          f"({n_new/dt:.1f} tok/s incl. compile)")
+
+
+if __name__ == "__main__":
+    main()

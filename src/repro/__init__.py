@@ -1,0 +1,16 @@
+"""repro — distributed mRMR feature selection (Reggiani et al., 2017) in JAX.
+
+A production-grade JAX framework reproducing and extending
+"Feature selection in high-dimensional dataset using MapReduce":
+
+* ``repro.core``    — the paper's contribution: distributed mRMR with both
+  data encodings (conventional = observation-sharded, alternative =
+  feature-sharded), pluggable feature-score functions, and an incremental
+  redundancy optimisation.
+* ``repro.kernels`` — Pallas TPU kernels for the scoring hot spots.
+* ``repro.models``  — architecture zoo (dense / MoE / SSM / hybrid / enc-dec
+  / VLM backbones) used as workloads for the distribution substrate.
+* ``repro.launch``  — production mesh, multi-pod dry-run, train/serve CLIs.
+"""
+
+__version__ = "1.0.0"

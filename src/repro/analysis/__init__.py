@@ -1,0 +1,2 @@
+from repro.analysis.hlo_analysis import collective_stats  # noqa: F401
+from repro.analysis.roofline import roofline_terms, model_flops  # noqa: F401

@@ -1,0 +1,553 @@
+"""Trip-count-aware cost + collective accounting from compiled HLO text.
+
+Why this exists: ``compiled.cost_analysis()`` visits each computation once,
+so everything inside a ``while`` body — which is *the whole layer stack*
+under scan-over-layers — is counted for ONE trip instead of ``num_groups``
+trips, and collective bytes are not reported at all.  This module re-derives
+per-device costs from the scheduled HLO text:
+
+* **flops** — 2 · |out| · |contracting| for every ``dot`` (operand shapes are
+  resolved through a per-computation symbol table, since scheduled HLO
+  prints operands by name only);
+* **bytes** — Σ (operand + output bytes) per op, fusions charged at their
+  call site only (fused internals stay in registers), bookkeeping ops free;
+* **collectives** — operand bytes per op derived from the *output* shape
+  (all-reduce: out, all-gather: out/g, reduce-scatter: out·g, all-to-all /
+  collective-permute: out) plus a ring-algorithm wire-byte estimate;
+* every quantity is multiplied by the enclosing ``while`` trip counts
+  (``known_trip_count`` backend config, else the loop-condition constant).
+
+All shapes in the compiled module are per-device (SPMD), so totals here are
+per-device; the roofline layer converts to fleet-level terms.
+
+**bf16 correction.**  The CPU backend has no bf16 compute units, so XLA's
+float-normalization pass rewrites every bf16 value to f32 between explicit
+converts — the lowered module carries activations, partial sums and
+collective payloads at TWICE the width a TPU (native-bf16 MXU) would move.
+``analyze_hlo(..., bf16_model=True)`` therefore counts f32 tensors at 2
+bytes/element, EXCEPT ops that are f32 *by design* in the model (and would
+be f32 on TPU too): softmax/logsumexp internals, the f32 attention-score
+einsums, RMSNorm/LayerNorm statistics, and the optimizer update — matched
+via ``op_name`` metadata.  Both raw and corrected totals are reported in
+the dry-run records; EXPERIMENTS.md §Roofline uses the corrected ones and
+discusses the residual (~±6%) bias.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s2": 1, "s4": 1, "s8": 1, "u2": 1, "u4": 1, "u8": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2fnuz": 1, "f8e4m3fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    "f4e2m1fn": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+# ops that move no bytes of their own
+_FREE_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "domain", "opt-barrier",
+    "custom-call",  # CPU topk/etc: operands counted by producers; keep free
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_LINE_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.*)$")
+_HEADER_RE = re.compile(
+    r"^\s*(ENTRY\s+)?%?([\w\.\-]+)\s+\((?P<params>.*)\)\s*->\s*.*\{\s*$"
+)
+_PARAM_RE = re.compile(r"([\w\.\-]+):\s*((?:\([^)]*\))|(?:[a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?))")
+_TRIP_RE = re.compile(r'"known_trip_count":\s*\{\s*"n":\s*"(\d+)"')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([0-9, ]*)\}")
+_NUM_PARTITIONS_RE = re.compile(r"num_partitions=(\d+)")
+_META_NAME_RE = re.compile(r'op_name="([^"]+)"')
+# ops that are f32 BY DESIGN in the model (f32 on TPU as well): exempt from
+# the bf16 width correction.
+_F32_BY_DESIGN_RE = re.compile(
+    r"softmax|logsumexp|log_softmax|bkgst|rsqrt|reduce_max"
+    r"|adamw|optimizer|global_norm"
+)
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_WHILE_ATTR_RE = re.compile(r"condition=%?([\w\.\-]+),\s*body=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w\.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _shape_bytes(seg: str, halve_f32: bool = False) -> float:
+    total = 0.0
+    for dtype, dims in _SHAPE_RE.findall(seg):
+        size = _DTYPE_BYTES.get(dtype)
+        if size is None:
+            continue
+        if halve_f32 and dtype == "f32":
+            size = 2  # counted at the bf16 width a TPU lowering would move
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        total += n * size
+    return total
+
+
+def _shape_dims(seg: str) -> Optional[List[int]]:
+    m = _SHAPE_RE.search(seg)
+    if not m:
+        return None
+    dims = [int(d) for d in m.group(2).split(",") if d.strip()]
+    return dims
+
+
+@dataclasses.dataclass
+class _Comp:
+    name: str
+    lines: List[str]
+    symbols: Dict[str, str]  # op name -> shape segment (output)
+    exempt: Dict[str, bool] = dataclasses.field(default_factory=dict)
+    params: List[str] = dataclasses.field(default_factory=list)
+    is_entry: bool = False
+
+    def is_identity_convert(self) -> bool:
+        """Body is only convert/copy/bitcast AND the output type equals the
+        (single) input type: a convert round-trip (f32->bf16->f32) that the
+        CPU float-normalization pass creates and TPU algsimp folds away.
+        Counted as zero traffic under the bf16 model.  A genuine
+        f32->bf16 cast (different dtypes) still counts."""
+        kinds = set()
+        root_shape = None
+        for line in self.lines:
+            om = _OP_LINE_RE.match(line)
+            if not om:
+                continue
+            shape_seg, op, _ = _parse_rhs(om.group(2))
+            kinds.add(op)
+            if "ROOT" in line:
+                root_shape = shape_seg.strip()
+        allowed = {"parameter", "convert", "copy", "bitcast", ""}
+        if not kinds or not kinds <= allowed or "convert" not in kinds:
+            return False
+        return (
+            root_shape is not None
+            and len(self.params) == 1
+            and _SHAPE_RE.search(self.params[0]) is not None
+            and _SHAPE_RE.search(root_shape) is not None
+            and _SHAPE_RE.search(self.params[0]).groups()
+            == _SHAPE_RE.search(root_shape).groups()
+        )
+
+
+def _matching_paren(s: str, start: int) -> int:
+    depth = 0
+    for i in range(start, len(s)):
+        if s[i] == "(":
+            depth += 1
+        elif s[i] == ")":
+            depth -= 1
+            if depth == 0:
+                return i
+    return len(s) - 1
+
+
+def _parse_rhs(rhs: str) -> Tuple[str, str, str]:
+    """rhs of '=' -> (shape_segment, op_name, operand_segment)."""
+    rhs = rhs.strip()
+    if rhs.startswith("("):
+        end = _matching_paren(rhs, 0)
+        shape_seg = rhs[: end + 1]
+        rest = rhs[end + 1 :].strip()
+    else:
+        m = re.match(r"^([a-z][a-z0-9]*\[[0-9,]*\](?:\{[^}]*\})?(?:\s*)?)", rhs)
+        if not m:
+            return "", "", ""
+        shape_seg = m.group(1)
+        rest = rhs[m.end() :].strip()
+    m = re.match(r"^([\w\-]+)\(", rest)
+    if not m:
+        return shape_seg, "", ""
+    op = m.group(1)
+    p0 = rest.find("(")
+    p1 = _matching_paren(rest, p0)
+    return shape_seg, op, rest[p0 + 1 : p1]
+
+
+def _parse_computations(text: str) -> Dict[str, _Comp]:
+    comps: Dict[str, _Comp] = {}
+    cur: Optional[_Comp] = None
+    for line in text.splitlines():
+        m = _HEADER_RE.match(line)
+        if m and "->" in line and not line.lstrip().startswith("//"):
+            cur = _Comp(name=m.group(2), lines=[], symbols={},
+                        is_entry=bool(m.group(1)))
+            for pname, pshape in _PARAM_RE.findall(m.group("params")):
+                cur.symbols[pname] = pshape
+                cur.params.append(pshape)
+            comps[cur.name] = cur
+            if cur.is_entry:
+                comps["__entry__"] = cur
+            continue
+        if cur is None:
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        om = _OP_LINE_RE.match(line)
+        if om:
+            shape_seg, _, _ = _parse_rhs(om.group(2))
+            cur.symbols[om.group(1)] = shape_seg
+            mm = _META_NAME_RE.search(line)
+            cur.exempt[om.group(1)] = bool(
+                mm and _F32_BY_DESIGN_RE.search(mm.group(1))
+            )
+            cur.lines.append(line)
+    return comps
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    operand_bytes: float
+    group_size: int
+    trip_mult: int = 1
+
+    @property
+    def wire_bytes(self) -> float:
+        g = max(self.group_size, 1)
+        if self.kind == "all-reduce":
+            f = 2 * (g - 1) / g
+        elif self.kind == "collective-permute":
+            f = 1.0
+        else:  # all-gather / reduce-scatter / all-to-all per-operand ring
+            f = (g - 1) / g
+        return self.operand_bytes * f
+
+
+@dataclasses.dataclass
+class _Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collectives: List[CollectiveOp] = dataclasses.field(default_factory=list)
+
+    def scaled(self, k: int) -> "_Cost":
+        return _Cost(
+            self.flops * k,
+            self.bytes * k,
+            [
+                dataclasses.replace(c, trip_mult=c.trip_mult * k)
+                for c in self.collectives
+            ],
+        )
+
+    def add(self, other: "_Cost") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.collectives.extend(other.collectives)
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len([t for t in m.group(1).split(",") if t.strip()])
+    return world
+
+
+def _collective_from_line(
+    kind: str, shape_seg: str, line: str, world: int,
+    halve_f32: bool = False,
+) -> CollectiveOp:
+    out_bytes = _shape_bytes(shape_seg, halve_f32)
+    g = _group_size(line, world)
+    if kind == "all-gather":
+        operand = out_bytes / max(g, 1)
+    elif kind == "reduce-scatter":
+        operand = out_bytes * max(g, 1)
+    else:  # all-reduce, all-to-all, collective-permute, broadcast
+        operand = float(out_bytes)
+    return CollectiveOp(kind=kind, operand_bytes=operand, group_size=g)
+
+
+def _dot_flops(comp: _Comp, operand_seg: str, shape_seg: str, line: str) -> float:
+    out_dims = _shape_dims(shape_seg) or []
+    out = 1
+    for d in out_dims:
+        out *= d
+    names = re.findall(r"%([\w\.\-]+)", operand_seg)
+    lhs_dims = _shape_dims(comp.symbols.get(names[0], "")) if names else None
+    cm = _CONTRACT_RE.search(line)
+    contract = 1
+    if lhs_dims and cm:
+        for tok in cm.group(1).split(","):
+            tok = tok.strip()
+            if tok:
+                i = int(tok)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * out * contract
+
+
+def _line_bytes(
+    comp: _Comp, op: str, shape_seg: str, operand_seg: str,
+    bf16_model: bool = False, out_exempt: bool = False,
+) -> float:
+    if op in _FREE_OPS or op == "while":
+        return 0.0
+    out_bytes = float(_shape_bytes(shape_seg, bf16_model and not out_exempt))
+    # Sliced reads/writes touch the slice, not the whole buffer (this is
+    # what makes scan-over-layers cheap: each trip reads ONE layer's slice
+    # of the stacked weights).  dynamic-update-slice aliases in place:
+    # read update + write region.
+    if op in ("dynamic-slice", "gather"):
+        return 2.0 * out_bytes
+    names = re.findall(r"%([\w\.\-]+)", operand_seg)
+    if op in ("dynamic-update-slice", "scatter"):
+        upd = names[1] if len(names) > 1 else None
+        halve = bf16_model and not comp.exempt.get(upd, False)
+        return 2.0 * _shape_bytes(comp.symbols.get(upd, ""), halve) + (
+            out_bytes if op == "scatter" else 0.0
+        )
+    total = out_bytes
+    for name in names:
+        halve = bf16_model and not comp.exempt.get(name, False)
+        total += _shape_bytes(comp.symbols.get(name, ""), halve)
+    return total
+
+
+def _callee_param_reads(callee: _Comp):
+    """Per-parameter effective read segments for a fusion body.
+
+    Returns a list (indexed by parameter number) of either ``None`` (full
+    read) or a list of output shape segments of the dynamic-slice/gather
+    ops that are the parameter's ONLY consumers — the fused loads only
+    touch the sliced region.
+    """
+    if not hasattr(callee, "_param_reads"):
+        pidx: Dict[str, int] = {}
+        for line in callee.lines:
+            pm = re.match(
+                r"\s*(?:ROOT\s+)?%([\w\.\-]+) = .*? parameter\((\d+)\)", line
+            )
+            if pm:
+                pidx[pm.group(1)] = int(pm.group(2))
+        reads: Dict[int, object] = {}
+        for line in callee.lines:
+            om = _OP_LINE_RE.match(line)
+            if not om:
+                continue
+            shape_seg, op, operand_seg = _parse_rhs(om.group(2))
+            if not op or op == "parameter":
+                continue
+            names = re.findall(r"%([\w\.\-]+)", operand_seg)
+            for j, nm in enumerate(names):
+                if nm not in pidx:
+                    continue
+                i = pidx[nm]
+                sliced = op in ("dynamic-slice", "gather") and j == 0
+                if sliced and reads.get(i) is not False:
+                    reads.setdefault(i, [])
+                    if isinstance(reads[i], list):
+                        reads[i].append(shape_seg)
+                else:
+                    reads[i] = False  # some non-sliced use: full read
+        out = []
+        for i in range(len(callee.params)):
+            r = reads.get(i)
+            out.append(r if isinstance(r, list) else None)
+        callee._param_reads = out
+    return callee._param_reads
+
+
+def _fusion_call_bytes(
+    comp: _Comp, callee: Optional[_Comp], shape_seg: str, operand_seg: str,
+    bf16_model: bool, out_exempt: bool,
+) -> float:
+    """Call-site bytes for a fusion, honouring sliced parameter reads."""
+    total = float(_shape_bytes(shape_seg, bf16_model and not out_exempt))
+    names = re.findall(r"%([\w\.\-]+)", operand_seg)
+    reads = _callee_param_reads(callee) if callee is not None else None
+    for i, name in enumerate(names):
+        halve = bf16_model and not comp.exempt.get(name, False)
+        if reads is not None and i < len(reads) and reads[i] is not None:
+            total += sum(_shape_bytes(s, halve) for s in reads[i])
+        else:
+            total += _shape_bytes(comp.symbols.get(name, ""), halve)
+    return total
+
+
+def _trip_count(line: str, comps: Dict[str, _Comp], cond_name: str) -> int:
+    m = _TRIP_RE.search(line)
+    if m:
+        return int(m.group(1))
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts: Dict[str, int] = {}
+    for ln in cond.lines:
+        cm = re.search(r"%([\w\.\-]+) = s32\[\] constant\((\d+)\)", ln)
+        if cm:
+            consts[cm.group(1)] = int(cm.group(2))
+    for ln in cond.lines:
+        if "compare(" in ln and ("ROOT" in ln or "direction=LT" in ln):
+            for name, val in consts.items():
+                if f"%{name}" in ln:
+                    return val
+    return 1
+
+
+def _walk(
+    name: str,
+    comps: Dict[str, _Comp],
+    world: int,
+    memo: Dict[Tuple[str, bool], _Cost],
+    stack: set,
+    flops_only: bool = False,
+    bf16_model: bool = False,
+) -> _Cost:
+    key = (name, flops_only)
+    if key in memo:
+        return memo[key]
+    comp = comps.get(name)
+    if comp is None or name in stack:
+        return _Cost()
+    stack.add(name)
+    cost = _Cost()
+
+    def lbytes(op, shape_seg, operand_seg, own):
+        return _line_bytes(
+            comp, op, shape_seg, operand_seg, bf16_model,
+            comp.exempt.get(own, False),
+        )
+
+    for line in comp.lines:
+        om = _OP_LINE_RE.match(line)
+        if not om:
+            continue
+        own = om.group(1)
+        shape_seg, op, operand_seg = _parse_rhs(om.group(2))
+        if not op:
+            continue
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_KINDS:
+            if not flops_only:
+                halve = bf16_model and not comp.exempt.get(own, False)
+                cost.collectives.append(
+                    _collective_from_line(base, shape_seg, line, world, halve)
+                )
+                cost.bytes += lbytes(base, shape_seg, operand_seg, own)
+            continue
+        if op == "while":
+            wm = _WHILE_ATTR_RE.search(line)
+            if wm:
+                trips = _trip_count(line, comps, wm.group(1))
+                body = _walk(wm.group(2), comps, world, memo, stack,
+                             flops_only, bf16_model)
+                cost.add(body.scaled(trips))
+            continue
+        if op == "conditional":
+            bm = _BRANCHES_RE.search(line)
+            if bm:
+                best = _Cost()
+                for b in bm.group(1).split(","):
+                    sub = _walk(
+                        b.strip().lstrip("%"), comps, world, memo, stack,
+                        flops_only, bf16_model,
+                    )
+                    if sub.flops + sub.bytes > best.flops + best.bytes:
+                        best = sub
+                cost.add(best)
+            if not flops_only:
+                cost.bytes += lbytes(op, shape_seg, operand_seg, own)
+            continue
+        if op == "call":
+            tm = _TO_APPLY_RE.search(line)
+            if tm:
+                cost.add(_walk(tm.group(1), comps, world, memo, stack,
+                               flops_only, bf16_model))
+            continue
+        if op == "fusion":
+            # fused internals are register-resident: bytes at call site only,
+            # but any dot inside still runs on the MXU.
+            fm = _CALLS_RE.search(line)
+            callee = comps.get(fm.group(1)) if fm else None
+            if fm:
+                cost.add(
+                    _walk(fm.group(1), comps, world, memo, stack, True,
+                          bf16_model)
+                )
+            if not flops_only:
+                if (
+                    bf16_model
+                    and callee is not None
+                    and callee.is_identity_convert()
+                ):
+                    continue  # convert round-trip: free on TPU (see _Comp)
+                cost.bytes += _fusion_call_bytes(
+                    comp, callee, shape_seg, operand_seg, bf16_model,
+                    comp.exempt.get(own, False),
+                )
+            continue
+        if op == "dot":
+            cost.flops += _dot_flops(comp, operand_seg, shape_seg, line)
+            if not flops_only:
+                cost.bytes += lbytes(op, shape_seg, operand_seg, own)
+            continue
+        # plain op (reduce/sort/map keep their scalar regions un-descended)
+        if not flops_only:
+            cost.bytes += lbytes(op, shape_seg, operand_seg, own)
+    stack.discard(name)
+    memo[key] = cost
+    return cost
+
+
+def analyze_hlo(text: str, bf16_model: bool = False) -> dict:
+    """Per-device {flops, bytes, collectives} with while-loops unrolled.
+
+    ``bf16_model=True`` applies the TPU width correction (module docstring).
+    """
+    comps = _parse_computations(text)
+    mw = _NUM_PARTITIONS_RE.search(text)
+    world = int(mw.group(1)) if mw else 1
+    cost = _walk("__entry__", comps, world, {}, set(), False, bf16_model)
+    by_type: Dict[str, dict] = {}
+    total = 0.0
+    wire = 0.0
+    for c in cost.collectives:
+        b = c.operand_bytes * c.trip_mult
+        w = c.wire_bytes * c.trip_mult
+        total += b
+        wire += w
+        slot = by_type.setdefault(
+            c.kind, {"operand_bytes": 0.0, "wire_bytes": 0.0, "count": 0}
+        )
+        slot["operand_bytes"] += b
+        slot["wire_bytes"] += w
+        slot["count"] += c.trip_mult
+    return {
+        "flops": cost.flops,
+        "bytes": cost.bytes,
+        "num_partitions": world,
+        "collectives": {
+            "operand_bytes": total,
+            "wire_bytes": wire,
+            "by_type": by_type,
+            "num_static_sites": len(cost.collectives),
+        },
+    }
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Back-compat wrapper: just the collective block of ``analyze_hlo``."""
+    return analyze_hlo(hlo_text)["collectives"]

@@ -1,0 +1,147 @@
+"""Rank compiled-HLO ops by bytes / collective traffic (trip-aware).
+
+The §Perf profiling loop on a CPU-only container: instead of a wall-clock
+trace, rank every op site by its contribution to the roofline terms and
+attribute it back to model code via the ``op_name`` metadata.
+
+    PYTHONPATH=src python -m repro.analysis.hlo_top results/dryrun/single/X.hlo.txt
+"""
+
+from __future__ import annotations
+
+import re
+import sys
+from collections import defaultdict
+
+from repro.analysis.hlo_analysis import (
+    COLLECTIVE_KINDS,
+    _collective_from_line,
+    _fusion_call_bytes,
+    _line_bytes,
+    _dot_flops,
+    _parse_computations,
+    _parse_rhs,
+    _trip_count,
+    _OP_LINE_RE,
+    _NUM_PARTITIONS_RE,
+    _WHILE_ATTR_RE,
+    _CALLS_RE,
+    _TO_APPLY_RE,
+)
+
+_META_RE = re.compile(r'op_name="([^"]+)"')
+
+
+def _short(meta: str, maxlen: int = 70) -> str:
+    meta = re.sub(r"jit\(\w+\)/", "", meta)
+    return meta[-maxlen:]
+
+
+def collect(text: str, bf16_model: bool = False):
+    comps = _parse_computations(text)
+    mw = _NUM_PARTITIONS_RE.search(text)
+    world = int(mw.group(1)) if mw else 1
+    sites = []  # (bytes, flops, coll_bytes, kind, meta)
+
+    def walk(name: str, mult: int, flops_only: bool, seen: tuple):
+        comp = comps.get(name)
+        if comp is None or name in seen:
+            return
+        for line in comp.lines:
+            om = _OP_LINE_RE.match(line)
+            if not om:
+                continue
+            shape_seg, op, operand_seg = _parse_rhs(om.group(2))
+            if not op:
+                continue
+            meta = _META_RE.search(line)
+            meta = _short(meta.group(1)) if meta else ""
+            own = om.group(1)
+            own_ex = comp.exempt.get(own, False)
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_KINDS and not flops_only:
+                c = _collective_from_line(
+                    base, shape_seg, line, world, bf16_model and not own_ex
+                )
+                sites.append(
+                    (0.0, 0.0, c.operand_bytes * mult, f"{base}(g={c.group_size})", meta)
+                )
+                continue
+            if op == "while":
+                wm = _WHILE_ATTR_RE.search(line)
+                if wm:
+                    trips = _trip_count(line, comps, wm.group(1))
+                    walk(wm.group(2), mult * trips, flops_only, seen + (name,))
+                continue
+            if op == "call":
+                tm = _TO_APPLY_RE.search(line)
+                if tm:
+                    walk(tm.group(1), mult, flops_only, seen + (name,))
+                continue
+            if op == "fusion":
+                fm = _CALLS_RE.search(line)
+                callee = comps.get(fm.group(1)) if fm else None
+                if fm:
+                    walk(fm.group(1), mult, True, seen + (name,))
+                if not flops_only:
+                    if (bf16_model and callee is not None
+                            and callee.is_identity_convert()):
+                        continue
+                    b = _fusion_call_bytes(comp, callee, shape_seg,
+                                           operand_seg, bf16_model, own_ex)
+                    sites.append((b * mult, 0.0, 0.0, op, meta))
+                continue
+            fl = _dot_flops(comp, operand_seg, shape_seg, line) if op == "dot" else 0.0
+            b = 0.0 if flops_only else _line_bytes(
+                comp, op, shape_seg, operand_seg, bf16_model, own_ex
+            )
+            if b or fl:
+                sites.append((b * mult, fl * mult, 0.0, op, meta))
+
+    walk("__entry__", 1, False, ())
+    return sites
+
+
+def main() -> None:
+    path = sys.argv[1]
+    top_n = int(sys.argv[2]) if len(sys.argv) > 2 else 25
+    bf16 = "--bf16" in sys.argv
+    sites = collect(open(path).read(), bf16_model=bf16)
+
+    print("== top ops by HBM bytes (per device, trips unrolled) ==")
+    agg = defaultdict(lambda: [0.0, 0])
+    for b, fl, cb, kind, meta in sites:
+        if b:
+            key = (kind, meta)
+            agg[key][0] += b
+            agg[key][1] += 1
+    total_b = sum(v[0] for v in agg.values())
+    for (kind, meta), (b, n) in sorted(agg.items(), key=lambda kv: -kv[1][0])[:top_n]:
+        print(f"  {b/1e9:10.2f} GB {100*b/total_b:5.1f}% x{n:<4d} {kind:<18s} {meta}")
+    print(f"  total: {total_b/1e9:.2f} GB")
+
+    print("\n== collectives (per device) ==")
+    agg2 = defaultdict(lambda: [0.0, 0])
+    for b, fl, cb, kind, meta in sites:
+        if cb:
+            agg2[(kind, meta)][0] += cb
+            agg2[(kind, meta)][1] += 1
+    total_c = sum(v[0] for v in agg2.values()) or 1.0
+    for (kind, meta), (cb, n) in sorted(agg2.items(), key=lambda kv: -kv[1][0])[:top_n]:
+        print(f"  {cb/1e9:10.3f} GB {100*cb/total_c:5.1f}% x{n:<4d} {kind:<24s} {meta}")
+    print(f"  total: {total_c/1e9:.2f} GB")
+
+    print("\n== top dots by FLOPs (per device) ==")
+    agg3 = defaultdict(lambda: [0.0, 0])
+    for b, fl, cb, kind, meta in sites:
+        if fl:
+            agg3[meta][0] += fl
+            agg3[meta][1] += 1
+    total_f = sum(v[0] for v in agg3.values()) or 1.0
+    for meta, (fl, n) in sorted(agg3.items(), key=lambda kv: -kv[1][0])[:top_n]:
+        print(f"  {fl/1e12:10.3f} TF {100*fl/total_f:5.1f}% x{n:<4d} {meta}")
+    print(f"  total: {total_f/1e12:.2f} TFLOP")
+
+
+if __name__ == "__main__":
+    main()

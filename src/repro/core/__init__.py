@@ -1,0 +1,20 @@
+# The paper's primary contribution: distributed mRMR feature selection.
+from repro.core.mrmr import (  # noqa: F401
+    MRMRResult,
+    mrmr_alternative,
+    mrmr_conventional,
+    mrmr_grid,
+    mrmr_reference,
+)
+from repro.core.scores import (  # noqa: F401
+    CustomScore,
+    MIScore,
+    PearsonMIScore,
+    ScoreFn,
+    cor2mi,
+    entropy_from_counts,
+    mi_from_counts,
+    mrmr_custom_score,
+    pearson_rows,
+)
+from repro.core.selection import FeatureSelector, infer_layout, mrmr_select  # noqa: F401

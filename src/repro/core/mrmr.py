@@ -1,0 +1,519 @@
+"""mRMR greedy drivers — single-device reference + three sharded layouts.
+
+The paper distributes mRMR two ways, keyed by data layout (Section III/IV):
+
+* **conventional** — rows are observations; the dataset is sharded over the
+  observation axis.  Scoring = per-shard contingency tables, element-wise
+  summed across the cluster (mapper+combiner+reducer -> one ``psum``).
+  Discrete data only, MI score only (as in the paper).
+* **alternative** — rows are features; the dataset is sharded over the
+  feature axis.  The class vector and selected features are broadcast
+  (replicated); scoring is entirely local (map-only job), any score fn.
+* **grid** (beyond paper) — shard observations *and* features on a 2-D mesh;
+  contingency tables psum over the observation axes, argmax over the
+  feature axes.  Generalises both encodings and removes the paper's
+  single-axis memory walls.
+
+All drivers run the greedy loop as ONE compiled ``lax.fori_loop`` over
+static shapes (selected sets become masks), instead of one Spark job per
+iteration.  ``incremental=True`` carries a running redundancy sum (each
+iteration scores candidates against only the newly selected feature —
+O(N·L) total pair scores); ``incremental=False`` is the paper-faithful
+recomputation (O(N·L²)) kept as the reproduction baseline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import contingency
+from repro.core.scores import CustomScore, MIScore, ScoreFn, mi_from_counts
+
+Array = jax.Array
+
+_NEG_INF = jnp.float32(-jnp.inf)
+_BIG_ID = jnp.int32(2**31 - 1)
+
+
+@dataclasses.dataclass
+class MRMRResult:
+    """Selection order (length L) and the mRMR gain of each pick."""
+
+    selected: Array
+    gains: Array
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _axes_tuple(axes) -> tuple:
+    if axes is None:
+        return ()
+    if isinstance(axes, (list, tuple)):
+        return tuple(axes)
+    return (axes,)
+
+
+def _pvary(x, axes: tuple):
+    """Mark ``x`` as varying over ``axes`` (shard_map VMA typing helper)."""
+    if not axes:
+        return x
+    return jax.tree.map(lambda v: lax.pvary(v, axes), x)
+
+
+def _flat_axis_index(axes: Sequence[str], mesh_axis_sizes: dict) -> Array:
+    """Row-major flattened index of this shard along ``axes``."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh_axis_sizes[a] + lax.axis_index(a)
+    return idx
+
+
+def _distributed_argmax(values: Array, ids: Array, axes: tuple):
+    """Global (argmax-id, max) of per-shard score slices.
+
+    Ties break toward the smallest global feature id, making the result
+    independent of the shard layout (tested property).
+    """
+    arg_local = jnp.argmax(values)
+    best_local = values[arg_local]
+    id_local = ids[arg_local]
+    if axes:
+        best = lax.pmax(best_local, axes)
+        cand = jnp.where(best_local >= best, id_local, _BIG_ID)
+        k = lax.pmin(cand, axes)
+    else:
+        best, k = best_local, id_local
+    return k, best
+
+
+def _loop_state(n_local: int, num_select: int):
+    return dict(
+        mask=jnp.zeros((n_local,), jnp.bool_),
+        red_sum=jnp.zeros((n_local,), jnp.float32),
+        selected=jnp.full((num_select,), -1, jnp.int32),
+        gains=jnp.zeros((num_select,), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# single-device reference driver (feature-major), any score fn
+# ---------------------------------------------------------------------------
+
+def mrmr_reference(
+    X_rows: Array,
+    y: Array,
+    num_select: int,
+    score: ScoreFn,
+    *,
+    incremental: bool = True,
+) -> MRMRResult:
+    """Pure-jnp mRMR on one device. ``X_rows`` is feature-major (N, M)."""
+    n, m = X_rows.shape
+    ids = jnp.arange(n, dtype=jnp.int32)
+    custom = isinstance(score, CustomScore)
+    use_incr = incremental and score.incremental_safe and not custom
+
+    rel = None if custom else score.relevance(X_rows, y)
+    state = _loop_state(n, num_select)
+    state["sel_rows"] = jnp.zeros((num_select, m), X_rows.dtype)
+
+    def body(l, st):
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        if custom:
+            g = score.full_score(X_rows, y, st["sel_rows"], l)
+        elif use_incr:
+            g = rel - st["red_sum"] / denom
+        else:
+            def inner(j, acc):
+                return acc + score.redundancy(X_rows, st["sel_rows"][j])
+
+            red = lax.fori_loop(0, l, inner, jnp.zeros((n,), jnp.float32))
+            g = rel - red / denom
+        g = jnp.where(st["mask"], _NEG_INF, g)
+        k = jnp.argmax(g)
+        xk = X_rows[k]
+        st = dict(st)
+        st["mask"] = st["mask"].at[k].set(True)
+        st["selected"] = st["selected"].at[l].set(k.astype(jnp.int32))
+        st["gains"] = st["gains"].at[l].set(g[k])
+        st["sel_rows"] = lax.dynamic_update_slice(
+            st["sel_rows"], xk[None].astype(X_rows.dtype), (l, 0)
+        )
+        if use_incr:
+            st["red_sum"] = st["red_sum"] + score.redundancy(X_rows, xk)
+        return st
+
+    state = lax.fori_loop(0, num_select, body, state)
+    del ids
+    return MRMRResult(selected=state["selected"], gains=state["gains"])
+
+
+# ---------------------------------------------------------------------------
+# conventional encoding: observations sharded, contingency-table psum
+# ---------------------------------------------------------------------------
+
+def _conventional_body(
+    X_loc: Array,  # (M_loc, N) int, padded rows hold out-of-range values
+    y_loc: Array,  # (M_loc,)
+    *,
+    num_select: int,
+    score: MIScore,
+    obs_axes: tuple,
+    incremental: bool,
+    block: int,
+    onehot_dtype=jnp.bfloat16,
+    static_inner: bool = False,
+):
+    n = X_loc.shape[1]
+    v, c = score.num_values, score.num_classes
+
+    def counts_vs(tgt_loc: Array, vy: int) -> Array:
+        """Local map+combine, then the reduce: one psum over the obs axes."""
+        cnt = contingency.batched_counts(
+            X_loc, tgt_loc, v, vy, block=block, onehot_dtype=onehot_dtype
+        )
+        return lax.psum(cnt, obs_axes) if obs_axes else cnt
+
+    rel = mi_from_counts(counts_vs(y_loc, c))  # (N,) replicated
+    state = _loop_state(n, num_select)
+    # Selected *column indices* stand in for the paper's broadcast tables.
+    def body(l, st):
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        if incremental:
+            g = rel - st["red_sum"] / denom
+        else:
+            # static_inner trades the data-dependent trip count (paper: l-1
+            # passes at step l) for a fixed L-pass masked loop, so the
+            # dry-run HLO carries the recompute cost explicitly.
+            def inner(j, acc):
+                xj = jnp.take(X_loc, st["selected"][j], axis=1)
+                mi = mi_from_counts(counts_vs(xj, v))
+                if static_inner:
+                    mi = jnp.where(j < l, mi, 0.0)
+                return acc + mi
+
+            hi = num_select if static_inner else l
+            red = lax.fori_loop(0, hi, inner, jnp.zeros((n,), jnp.float32))
+            g = rel - red / denom
+        g = jnp.where(st["mask"], _NEG_INF, g)
+        k = jnp.argmax(g).astype(jnp.int32)
+        st = dict(st)
+        st["mask"] = st["mask"].at[k].set(True)
+        st["selected"] = st["selected"].at[l].set(k)
+        st["gains"] = st["gains"].at[l].set(g[k])
+        if incremental:
+            xk = jnp.take(X_loc, k, axis=1)
+            st["red_sum"] = st["red_sum"] + mi_from_counts(counts_vs(xk, v))
+        return st
+
+    state = lax.fori_loop(0, num_select, body, state)
+    return state["selected"], state["gains"]
+
+
+def mrmr_conventional(
+    X: Array,  # (M, N) conventional layout
+    y: Array,  # (M,)
+    num_select: int,
+    score: MIScore,
+    *,
+    mesh: Mesh | None = None,
+    obs_axes=("data",),
+    incremental: bool = True,
+    block: int = 64,
+) -> MRMRResult:
+    """Paper's conventional-encoding MapReduce job on a device mesh.
+
+    The dataset is sharded over observations (`obs_axes`); contingency
+    tables are locally combined and globally summed with one all-reduce per
+    scoring pass — the MapReduce shuffle collapsed onto the ICI ring.
+    """
+    fn = make_conventional_fn(
+        num_select, score, mesh=mesh, obs_axes=obs_axes,
+        incremental=incremental, block=block,
+    )
+    sel, gains = fn(X, y)
+    return MRMRResult(sel, gains)
+
+
+def make_conventional_fn(
+    num_select: int,
+    score: MIScore,
+    *,
+    mesh: Mesh | None = None,
+    obs_axes=("data",),
+    incremental: bool = True,
+    block: int = 64,
+    onehot_dtype=jnp.bfloat16,
+    static_inner: bool = False,
+):
+    """Jitted (X, y) -> (selected, gains) for the conventional encoding.
+
+    Exposed separately so benchmarks can ``.lower().compile()`` the job and
+    run the same HLO collective analysis as the LM dry-run cells.
+    """
+    if not isinstance(score, MIScore):
+        raise ValueError(
+            "conventional encoding works with discrete MI only (paper §IV.B); "
+            "use the alternative encoding for custom scores"
+        )
+    kwargs = dict(
+        num_select=num_select,
+        score=score,
+        incremental=incremental,
+        block=block,
+        onehot_dtype=onehot_dtype,
+        static_inner=static_inner,
+    )
+    if mesh is None:
+        return jax.jit(functools.partial(_conventional_body, obs_axes=(), **kwargs))
+    obs_axes = _axes_tuple(obs_axes)
+    body = functools.partial(_conventional_body, obs_axes=obs_axes, **kwargs)
+    return jax.jit(
+        jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(obs_axes, None), P(obs_axes)),
+            out_specs=P(),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# alternative encoding: features sharded, broadcast class/selected, map-only
+# ---------------------------------------------------------------------------
+
+def _alternative_body(
+    X_loc: Array,  # (N_loc, M) feature-major shard
+    y: Array,  # (M,) replicated (the paper's broadcast v_class)
+    *,
+    num_select: int,
+    n_features: int,
+    score: ScoreFn,
+    feat_axes: tuple,
+    axis_sizes: dict,
+    incremental: bool,
+):
+    n_loc, m = X_loc.shape
+    shard = _flat_axis_index(feat_axes, axis_sizes) if feat_axes else jnp.int32(0)
+    ids = shard * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+    valid = ids < n_features
+    custom = isinstance(score, CustomScore)
+    use_incr = incremental and score.incremental_safe and not custom
+
+    rel = None if custom else score.relevance(X_loc, y)
+    state = _loop_state(n_loc, num_select)
+    # mask/red_sum are per-shard slices -> varying along the feature axes.
+    state["mask"] = _pvary(state["mask"], feat_axes)
+    state["red_sum"] = _pvary(state["red_sum"], feat_axes)
+    # The paper's broadcast v_s: replicated buffer of selected feature rows.
+    state["sel_rows"] = jnp.zeros((num_select, m), jnp.float32)
+
+    def fetch_row(k):
+        """getEntry: psum of the masked local rows -> replicated (M,)."""
+        mine = (ids == k).astype(jnp.float32)
+        row = (X_loc.astype(jnp.float32) * mine[:, None]).sum(axis=0)
+        return lax.psum(row, feat_axes) if feat_axes else row
+
+    def body(l, st):
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        if custom:
+            g = score.full_score(X_loc, y, st["sel_rows"], l)
+        elif use_incr:
+            g = rel - st["red_sum"] / denom
+        else:
+            def inner(j, acc):
+                return acc + score.redundancy(X_loc, st["sel_rows"][j])
+
+            red0 = _pvary(jnp.zeros((n_loc,), jnp.float32), feat_axes)
+            red = lax.fori_loop(0, l, inner, red0)
+            g = rel - red / denom
+        g = jnp.where(st["mask"] | ~valid, _NEG_INF, g)
+        k, best = _distributed_argmax(g, ids, feat_axes)
+        xk = fetch_row(k)
+        st = dict(st)
+        st["mask"] = st["mask"] | (ids == k)
+        st["selected"] = st["selected"].at[l].set(k)
+        st["gains"] = st["gains"].at[l].set(best)
+        st["sel_rows"] = lax.dynamic_update_slice(st["sel_rows"], xk[None], (l, 0))
+        if use_incr:
+            st["red_sum"] = st["red_sum"] + score.redundancy(X_loc, xk)
+        return st
+
+    state = lax.fori_loop(0, num_select, body, state)
+    return state["selected"], state["gains"]
+
+
+def mrmr_alternative(
+    X_rows: Array,  # (N, M) alternative layout (rows = features)
+    y: Array,
+    num_select: int,
+    score: ScoreFn,
+    *,
+    mesh: Mesh | None = None,
+    feat_axes=("model",),
+    incremental: bool = True,
+    n_features: int | None = None,
+) -> MRMRResult:
+    """Paper's alternative-encoding job: feature-sharded, map-only scoring."""
+    n_features = int(n_features if n_features is not None else X_rows.shape[0])
+    fn = make_alternative_fn(
+        num_select, score, n_features, mesh=mesh, feat_axes=feat_axes,
+        incremental=incremental,
+    )
+    sel, gains = fn(X_rows, y)
+    return MRMRResult(sel, gains)
+
+
+def make_alternative_fn(
+    num_select: int,
+    score: ScoreFn,
+    n_features: int,
+    *,
+    mesh: Mesh | None = None,
+    feat_axes=("model",),
+    incremental: bool = True,
+):
+    """Jitted (X_rows, y) -> (selected, gains) for the alternative encoding."""
+    kwargs = dict(
+        num_select=num_select,
+        n_features=int(n_features),
+        score=score,
+        incremental=incremental,
+    )
+    if mesh is None:
+        return jax.jit(
+            functools.partial(
+                _alternative_body, feat_axes=(), axis_sizes={}, **kwargs
+            )
+        )
+    feat_axes = _axes_tuple(feat_axes)
+    axis_sizes = {a: mesh.shape[a] for a in feat_axes}
+    body = functools.partial(
+        _alternative_body, feat_axes=feat_axes, axis_sizes=axis_sizes, **kwargs
+    )
+    return jax.jit(
+        jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(feat_axes, None), P()),
+            out_specs=P(),
+        )
+    )
+
+
+# ---------------------------------------------------------------------------
+# grid encoding (beyond paper): shard observations AND features
+# ---------------------------------------------------------------------------
+
+def _grid_body(
+    X_loc: Array,  # (M_loc, N_loc) conventional-layout tile
+    y_loc: Array,  # (M_loc,)
+    *,
+    num_select: int,
+    n_features: int,
+    score: MIScore,
+    obs_axes: tuple,
+    feat_axes: tuple,
+    axis_sizes: dict,
+    block: int,
+    incremental: bool,
+):
+    m_loc, n_loc = X_loc.shape
+    v, c = score.num_values, score.num_classes
+    shard = _flat_axis_index(feat_axes, axis_sizes) if feat_axes else jnp.int32(0)
+    ids = shard * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
+    valid = ids < n_features
+
+    def counts_vs(tgt_loc: Array, vy: int) -> Array:
+        cnt = contingency.batched_counts(X_loc, tgt_loc, v, vy, block=block)
+        return lax.psum(cnt, obs_axes) if obs_axes else cnt
+
+    def fetch_col(k):
+        """Local rows of global column k, replicated across feature axes."""
+        k_loc = k - shard * n_loc
+        own = (k_loc >= 0) & (k_loc < n_loc)
+        col = jnp.take(X_loc, jnp.clip(k_loc, 0, n_loc - 1), axis=1)
+        col = jnp.where(own, col, 0).astype(jnp.float32)
+        col = lax.psum(col, feat_axes) if feat_axes else col
+        return col.astype(X_loc.dtype)
+
+    rel = mi_from_counts(counts_vs(y_loc, c))
+    state = _loop_state(n_loc, num_select)
+    state["mask"] = _pvary(state["mask"], feat_axes)
+    state["red_sum"] = _pvary(state["red_sum"], feat_axes)
+
+    def body(l, st):
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        if incremental:
+            g = rel - st["red_sum"] / denom
+        else:
+            def inner(j, acc):
+                xj = fetch_col(st["selected"][j])
+                return acc + mi_from_counts(counts_vs(xj, v))
+
+            red0 = _pvary(jnp.zeros((n_loc,), jnp.float32), feat_axes)
+            red = lax.fori_loop(0, l, inner, red0)
+            g = rel - red / denom
+        g = jnp.where(st["mask"] | ~valid, _NEG_INF, g)
+        k, best = _distributed_argmax(g, ids, feat_axes)
+        st = dict(st)
+        st["mask"] = st["mask"] | (ids == k)
+        st["selected"] = st["selected"].at[l].set(k)
+        st["gains"] = st["gains"].at[l].set(best)
+        if incremental:
+            xk = fetch_col(k)
+            st["red_sum"] = st["red_sum"] + mi_from_counts(counts_vs(xk, v))
+        return st
+
+    state = lax.fori_loop(0, num_select, body, state)
+    return state["selected"], state["gains"]
+
+
+def mrmr_grid(
+    X: Array,  # (M, N) conventional layout, sharded both ways
+    y: Array,
+    num_select: int,
+    score: MIScore,
+    *,
+    mesh: Mesh,
+    obs_axes=("data",),
+    feat_axes=("model",),
+    incremental: bool = True,
+    block: int = 64,
+    n_features: int | None = None,
+) -> MRMRResult:
+    """2-D sharded mRMR: observation axes × feature axes (beyond paper)."""
+    if not isinstance(score, MIScore):
+        raise ValueError("grid encoding is discrete/MI only")
+    obs_axes, feat_axes = _axes_tuple(obs_axes), _axes_tuple(feat_axes)
+    axis_sizes = {a: mesh.shape[a] for a in feat_axes}
+    body = functools.partial(
+        _grid_body,
+        num_select=num_select,
+        n_features=int(n_features if n_features is not None else X.shape[1]),
+        score=score,
+        obs_axes=obs_axes,
+        feat_axes=feat_axes,
+        axis_sizes=axis_sizes,
+        block=block,
+        incremental=incremental,
+    )
+    fn = jax.jit(
+        jax.shard_map(
+            body,
+            mesh=mesh,
+            in_specs=(P(obs_axes, feat_axes), P(obs_axes)),
+            out_specs=P(),
+        )
+    )
+    sel, gains = fn(X, y)
+    return MRMRResult(sel, gains)

@@ -1,0 +1,2 @@
+from repro.data.synthetic import corral_dataset, lm_token_batches  # noqa: F401
+from repro.data.pipeline import ShardedDataPipeline  # noqa: F401

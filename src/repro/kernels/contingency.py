@@ -1,0 +1,102 @@
+"""Pallas TPU kernel: batched contingency tables as one-hot MXU matmuls.
+
+The paper's conventional-encoding hot loop emits one contingency table per
+(observation, candidate-feature) pair and sums them (mapper + combiner).  A
+GPU port would scatter-add; TPUs have no fast scatter, so we reformulate the
+histogram as a matmul over on-the-fly one-hot tiles:
+
+    out[f*V + v, c] = sum_m  onehot(X[m, f])[v] * onehot(y[m])[c]
+                    = (A^T B)[f*V + v, c],
+    A = onehot(X_tile) in VMEM, shape (TM, TF*V);  B = onehot(y_tile), (TM, C)
+
+so every (TM, TF) input tile becomes a single (TF·V, TM) x (TM, C) MXU
+contraction.  The output block is revisited along the M grid axis
+(accumulate-into-output); the one-hot expansion never leaves VMEM.
+
+Tiling defaults: TM=512 rows, TF chosen so TF·V ≈ 256 lanes.  VMEM use is
+A (TM·TF·V·4) + B (TM·C·4) + out (TF·V·C·4) ≈ 2.3 MB at defaults — well
+inside the ~16 MB v5e VMEM budget.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(x_ref, y_ref, out_ref, *, num_values: int, num_classes: int):
+    """One (TM, TF) tile of X against the matching (TM, 1) tile of y."""
+    m_idx = pl.program_id(1)
+
+    x = x_ref[...]  # (TM, TF) int32
+    y = y_ref[...]  # (TM, 1) int32
+    tm, tf = x.shape
+
+    # One-hot expansion in VMEM. Out-of-range (padding) rows -> all-zero rows.
+    iota_v = jax.lax.broadcasted_iota(jnp.int32, (tm, tf, num_values), 2)
+    a = (x[:, :, None] == iota_v).astype(jnp.float32)  # (TM, TF, V)
+    a = a.reshape(tm, tf * num_values)
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (tm, num_classes), 1)
+    b = (y == iota_c).astype(jnp.float32)  # (TM, C)
+
+    part = jax.lax.dot_general(
+        a, b, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # (TF*V, C)
+
+    @pl.when(m_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += part
+
+
+def contingency_tables_pallas(
+    X: Array,
+    y: Array,
+    num_values: int,
+    num_classes: int,
+    *,
+    tile_m: int = 512,
+    tile_f: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """(M, F) int32, (M,) int32 -> (F, V, C) float32 contingency tables.
+
+    Padding rows may carry out-of-range values; they contribute nothing.
+    """
+    M, F = X.shape
+    if tile_f is None:
+        # Aim for TF*V ≈ 256 sublane-friendly rows of the A^T operand.
+        tile_f = max(1, min(F, 256 // max(num_values, 1)))
+    tile_m = min(tile_m, max(M, 1))
+
+    pad_m = (-M) % tile_m
+    pad_f = (-F) % tile_f
+    big = jnp.int32(2**31 - 1)  # out of range of any category
+    Xp = jnp.pad(X.astype(jnp.int32), ((0, pad_m), (0, pad_f)), constant_values=big)
+    yp = jnp.pad(y.astype(jnp.int32), (0, pad_m), constant_values=big)[:, None]
+
+    mp, fp = Xp.shape
+    grid = (fp // tile_f, mp // tile_m)
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_values=num_values, num_classes=num_classes),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, tile_f), lambda f, m: (m, f)),
+            pl.BlockSpec((tile_m, 1), lambda f, m: (m, 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (tile_f * num_values, num_classes), lambda f, m: (f, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((fp * num_values, num_classes), jnp.float32),
+        interpret=interpret,
+    )(Xp, yp)
+
+    return out.reshape(fp, num_values, num_classes)[:F]

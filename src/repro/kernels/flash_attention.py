@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: flash attention (online-softmax, VMEM-resident).
+
+This is the TPU answer to the §Roofline finding that every attention cell
+is memory-bound on (B, H, S, S) score/probability traffic: the blockwise
+jnp path (models/attention.py) bounds the *footprint* but still moves the
+S² intermediates through HBM; this kernel keeps them in VMEM entirely —
+HBM sees only Q, K, V and O.
+
+Schedule: grid (B, H, S/bq, S/bkv), KV innermost.  Running max / sum /
+accumulator live in VMEM scratch and survive across the KV axis; the
+output block is written once on the last KV step.  GQA is handled in the
+K/V BlockSpec index maps (query head h reads KV head h // group) — no
+repeated-KV materialisation.  Causal masking compares global q/k positions
+inside the tile.
+
+VMEM at defaults (bq=bkv=512, D=128, f32 compute): q+k+v tiles ≈ 0.8 MB,
+scores ≈ 1 MB, scratch ≈ 0.5 MB — comfortably inside the ~16 MB v5e
+budget.  MXU dims (bq×D · D×bkv) are 128-aligned.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            causal: bool, scale: float, block_q: int, block_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -jnp.inf)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :, 0, :].astype(jnp.float32) * scale  # (bq, D)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)  # (bkv, D)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # (bq, bkv)
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 0
+        )
+        kpos = ki * block_kv + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_kv), 1
+        )
+        s = jnp.where(qpos >= kpos, s, _NEG)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, :, 0, :] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(
+    q: Array,  # (B, S, H, D)
+    k: Array,  # (B, T, KV, D)
+    v: Array,  # (B, T, KV, D)
+    *,
+    causal: bool = True,
+    block_q: int = 512,
+    block_kv: int = 512,
+    interpret: bool = False,
+) -> Array:
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    group = h // kvh
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, t)
+    assert s % block_q == 0 and t % block_kv == 0, (s, t, block_q, block_kv)
+    grid = (b, h, s // block_q, t // block_kv)
+
+    kernel = functools.partial(
+        _kernel, causal=causal, scale=d ** -0.5,
+        block_q=block_q, block_kv=block_kv,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)),
+            pl.BlockSpec(
+                (1, block_kv, 1, d),
+                lambda b_, h_, qi, ki, _g=group: (b_, ki, h_ // _g, 0),
+            ),
+            pl.BlockSpec(
+                (1, block_kv, 1, d),
+                lambda b_, h_, qi, ki, _g=group: (b_, ki, h_ // _g, 0),
+            ),
+        ],
+        out_specs=pl.BlockSpec(
+            (1, block_q, 1, d), lambda b_, h_, qi, ki: (b_, qi, h_, 0)
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, s, h, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),   # running max
+            pltpu.VMEM((block_q,), jnp.float32),   # running sum
+            pltpu.VMEM((block_q, d), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: batched mutual information from contingency tables.
+
+Reduces stacked (F, V, C) contingency tables to per-feature MI in nats:
+
+    MI_f = sum_{v,c} p log(p / (p_v * p_c)),   p = counts_f / total_f
+
+Memory-bound elementwise-log + reduction; fusing it avoids three extra HBM
+round-trips (p, px*py, terms) after the contingency kernel.  Tables are
+flattened to (F, V*C) so the reduction runs over clean 2-D lanes; marginals
+are rebuilt in VMEM with two small reshapes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_EPS = 1e-12
+
+
+def _kernel(c_ref, out_ref, *, num_values: int, num_classes: int):
+    counts = c_ref[...]  # (TF, V*C)
+    tf = counts.shape[0]
+    cube = counts.reshape(tf, num_values, num_classes)
+
+    total = jnp.maximum(cube.sum(axis=(1, 2), keepdims=True), 1.0)
+    p = cube / total
+    px = p.sum(axis=2, keepdims=True)
+    py = p.sum(axis=1, keepdims=True)
+    ratio = p / jnp.maximum(px * py, _EPS)
+    terms = jnp.where(p > 0, p * jnp.log(jnp.maximum(ratio, _EPS)), 0.0)
+    out_ref[...] = terms.sum(axis=2).sum(axis=1, keepdims=True)
+
+
+def mi_scores_pallas(
+    counts: Array,
+    *,
+    tile_f: int = 256,
+    interpret: bool = False,
+) -> Array:
+    """(F, V, C) counts -> (F,) MI in nats (float32)."""
+    F, V, C = counts.shape
+    tile_f = min(tile_f, F)
+    pad_f = (-F) % tile_f
+    flat = counts.reshape(F, V * C).astype(jnp.float32)
+    flat = jnp.pad(flat, ((0, pad_f), (0, 0)))
+    fp = flat.shape[0]
+
+    out = pl.pallas_call(
+        functools.partial(_kernel, num_values=V, num_classes=C),
+        grid=(fp // tile_f,),
+        in_specs=[pl.BlockSpec((tile_f, V * C), lambda f: (f, 0))],
+        out_specs=pl.BlockSpec((tile_f, 1), lambda f: (f, 0)),
+        out_shape=jax.ShapeDtypeStruct((fp, 1), jnp.float32),
+        interpret=interpret,
+    )(flat)
+
+    return out[:F, 0]

@@ -1,0 +1,103 @@
+"""jit'd dispatch wrappers for the Pallas kernels.
+
+``use_pallas``:
+  * ``"auto"``  — compiled Pallas on TPU, interpreted Pallas is NOT silently
+    used on CPU (interpret mode is a correctness harness, ~100x slower than
+    jnp); CPU gets the jnp oracle instead.
+  * ``True``    — force Pallas (interpret=True off-TPU; used by tests).
+  * ``False``   — force the jnp oracle.
+
+This keeps one call site per op across the library while staying runnable
+on both the CPU CI container and a real TPU pod.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.contingency import contingency_tables_pallas
+from repro.kernels.mi_score import mi_scores_pallas
+from repro.kernels.pearson import pearson_corr_pallas
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _decide(use_pallas) -> tuple[bool, bool]:
+    """-> (run_pallas, interpret)."""
+    if use_pallas == "auto":
+        return (_on_tpu(), False)
+    if use_pallas:
+        return (True, not _on_tpu())
+    return (False, False)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_values", "num_classes", "use_pallas")
+)
+def contingency_tables(
+    X: Array, y: Array, num_values: int, num_classes: int, use_pallas="auto"
+) -> Array:
+    """(M, F), (M,) -> (F, V, C) contingency tables."""
+    run, interp = _decide(use_pallas)
+    if run:
+        return contingency_tables_pallas(
+            X, y, num_values, num_classes, interpret=interp
+        )
+    return ref.contingency_tables(X, y, num_values, num_classes)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def pearson_corr(X: Array, Y: Array, use_pallas="auto") -> Array:
+    """(F, M), (T, M) -> (F, T) row correlations."""
+    run, interp = _decide(use_pallas)
+    if run:
+        return pearson_corr_pallas(X, Y, interpret=interp)
+    return ref.pearson_corr(X, Y)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def mi_scores(counts: Array, use_pallas="auto") -> Array:
+    """(F, V, C) counts -> (F,) MI (nats)."""
+    run, interp = _decide(use_pallas)
+    if run:
+        return mi_scores_pallas(counts, interpret=interp)
+    return ref.mi_scores(counts)
+
+
+def mi_tables(
+    X: Array, y: Array, num_values: int, num_classes: int, use_pallas="auto"
+) -> Array:
+    """Fused convenience: per-feature MI against ``y`` from raw columns."""
+    counts = contingency_tables(X, y, num_values, num_classes, use_pallas)
+    return mi_scores(counts, use_pallas)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "block_q", "block_kv", "use_pallas")
+)
+def flash_attention(
+    q: Array, k: Array, v: Array, *, causal: bool = True,
+    block_q: int = 512, block_kv: int = 512, use_pallas="auto",
+) -> Array:
+    """(B,S,H,D), (B,T,KV,D) -> (B,S,H,D) GQA flash attention.
+
+    The TPU path for every attention cell in the §Roofline table (keeps the
+    S^2 score/prob intermediates in VMEM); the jnp oracle runs on CPU.
+    """
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    run, interp = _decide(use_pallas)
+    if run:
+        return flash_attention_pallas(
+            q, k, v, causal=causal, block_q=block_q, block_kv=block_kv,
+            interpret=interp,
+        )
+    return ref.flash_attention(q, k, v, causal=causal)

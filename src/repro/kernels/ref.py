@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic ground truth the kernels are tested against
+(``tests/test_kernels.py`` sweeps shapes/dtypes with ``interpret=True``).
+They delegate to the core library where the math already exists, so the
+kernel contract and the algorithm stay in lock-step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import contingency as _contingency
+from repro.core import scores as _scores
+
+Array = jax.Array
+
+
+def contingency_tables(X: Array, y: Array, num_values: int, num_classes: int) -> Array:
+    """(M, F) int, (M,) int -> (F, V, C) float32 contingency tables.
+
+    Out-of-range entries (padding) contribute zero counts.
+    """
+    return _contingency.batched_counts(
+        X, y, num_values, num_classes, block=max(1, min(64, X.shape[1]))
+    )
+
+
+def pearson_corr(X: Array, Y: Array) -> Array:
+    """(F, M), (T, M) -> (F, T) Pearson correlation of rows."""
+    return _scores.pearson_rows(X, Y)
+
+
+def mi_scores(counts: Array) -> Array:
+    """(F, V, C) counts -> (F,) mutual information in nats."""
+    return _scores.mi_from_counts(counts)
+
+
+def cor2mi(corr: Array) -> Array:
+    """Listing-8 Gaussian MI approximation."""
+    return _scores.cor2mi(corr)
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
+    """(B,S,H,D) x (B,T,KV,D) -> (B,S,H,D) GQA softmax attention (f32)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = q.reshape(b, s, kvh, h // kvh, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k.astype(jnp.float32))
+    if causal:
+        t = k.shape[1]
+        mask = jnp.tril(jnp.ones((s, t), jnp.bool_), k=t - s)
+        sc = jnp.where(mask[None, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, v.astype(jnp.float32))
+    return out.reshape(b, s, h, d).astype(q.dtype)

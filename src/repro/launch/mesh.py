@@ -1,0 +1,29 @@
+"""Production mesh definitions.
+
+``make_production_mesh`` is a *function* (never a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+``--xla_force_host_platform_device_count=512`` before first jax init and
+everything else must see the single real CPU device.
+
+Mesh topology (TPU v5e-class):
+
+* single pod: ``(data=16, model=16)`` — 256 chips, 2-D ICI torus.
+* multi pod:  ``(pod=2, data=16, model=16)`` — 512 chips; the leading
+  ``pod`` axis crosses the DCN boundary and composes with ``data`` for
+  data parallelism (gradient all-reduce spans ``('pod','data')``).
+"""
+
+from __future__ import annotations
+
+from repro.dist.meshes import make_mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2):
+    """Small mesh for CPU multi-device tests (8 forced host devices)."""
+    return make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,165 @@
+"""Production-style training driver.
+
+Wires the full substrate: mesh + sharded TrainState, scan/remat model,
+AdamW, deterministic resumable data pipeline, async sharded checkpoints,
+step watchdog (straggler alarm) and the crash-restart loop.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+        --preset smoke --steps 50 --global-batch 8 --seq-len 256 \
+        --ckpt-dir /tmp/ckpt --resume auto
+
+``--fail-at-step N`` injects a crash (fault-tolerance demo: the restart
+driver restores the latest checkpoint and the run completes bit-identically
+to an uninterrupted one — tested in tests/test_resilience.py).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config, smoke_config
+from repro.data.pipeline import ShardedDataPipeline
+from repro.dist.meshes import make_mesh
+from repro.models.model import build_model
+from repro.runtime.checkpoint import CheckpointManager
+from repro.runtime.resilience import StepWatchdog, run_with_restarts
+from repro.train.optimizer import AdamWConfig, warmup_cosine
+from repro.train.train_step import (
+    TrainState,
+    make_train_state_specs,
+    make_train_step,
+    train_state_shapes,
+)
+
+logging.basicConfig(level=logging.INFO, format="%(asctime)s %(message)s")
+log = logging.getLogger("repro.train")
+
+
+def build_local_mesh(model_parallel: int = 1):
+    n = len(jax.devices())
+    assert n % model_parallel == 0, (n, model_parallel)
+    return make_mesh((n // model_parallel, model_parallel), ("data", "model"))
+
+
+def parse_args(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", default="auto", choices=["auto", "none"])
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--watchdog-s", type=float, default=600.0)
+    ap.add_argument("--max-restarts", type=int, default=3)
+    ap.add_argument("--fail-at-step", type=int, default=-1,
+                    help="inject a crash once at this step (FT demo)")
+    ap.add_argument("--seed", type=int, default=0)
+    # quick model-surgery overrides (e.g. the ~100M example config)
+    for k in ("num-layers", "d-model", "num-heads", "num-kv-heads", "d-ff",
+              "vocab-size"):
+        ap.add_argument(f"--{k}", type=int, default=None)
+    return ap.parse_args(argv)
+
+
+def resolve_config(args):
+    cfg = get_config(args.arch) if args.preset == "full" else smoke_config(args.arch)
+    upd = {}
+    for k in ("num_layers", "d_model", "num_heads", "num_kv_heads", "d_ff",
+              "vocab_size"):
+        v = getattr(args, k)
+        if v is not None:
+            upd[k] = v
+    if args.microbatches > 1:
+        upd["microbatches"] = args.microbatches
+    if upd:
+        cfg = dataclasses.replace(cfg, **upd)
+    return cfg
+
+
+def main(argv=None) -> dict:
+    args = parse_args(argv)
+    cfg = resolve_config(args)
+    mesh = build_local_mesh(args.model_parallel)
+    bundle = build_model(cfg, mesh)
+    log.info("arch=%s params=%.2fM mesh=%s", cfg.name,
+             bundle.num_params() / 1e6, dict(mesh.shape))
+
+    opt_cfg = AdamWConfig(
+        learning_rate=warmup_cosine(args.lr, args.warmup, args.steps),
+        moment_dtype=cfg.optimizer_moment_dtype,
+    )
+    step_fn = jax.jit(make_train_step(bundle, opt_cfg), donate_argnums=0)
+    pipe = ShardedDataPipeline(
+        mesh=mesh, global_batch=args.global_batch, seq_len=args.seq_len,
+        vocab=cfg.vocab_size, seed=args.seed,
+    )
+    ckpt = CheckpointManager(args.ckpt_dir, keep=3)
+    specs = make_train_state_specs(bundle)
+    shardings = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+    if args.resume == "none":
+        for s in ckpt.all_steps():
+            pass  # keep old checkpoints; cold-start regardless
+    failed_once = {"done": False}
+    metrics_out: dict = {}
+
+    def make_state():
+        key = jax.random.PRNGKey(args.seed)
+        params = jax.jit(
+            bundle.init, out_shardings=shardings.params
+        )(key)
+        return TrainState.create(params, opt_cfg)
+
+    def state_like():
+        return train_state_shapes(bundle, opt_cfg)
+
+    def run_from(state: TrainState):
+        start = int(state.step)
+        t_tok = args.global_batch * args.seq_len
+        with StepWatchdog(timeout_s=args.watchdog_s) as dog:
+            t0 = time.time()
+            for step in range(start, args.steps):
+                if step == args.fail_at_step and not failed_once["done"]:
+                    failed_once["done"] = True
+                    raise RuntimeError(f"injected failure at step {step}")
+                state, metrics = step_fn(state, pipe.batch_at(step))
+                dog.beat(step)
+                if (step + 1) % args.log_every == 0 or step + 1 == args.steps:
+                    loss = float(metrics["loss"])
+                    dt = (time.time() - t0) / max(step + 1 - start, 1)
+                    log.info("step %d loss %.4f  %.2fs/step  %.0f tok/s",
+                             step + 1, loss, dt, t_tok / dt)
+                    metrics_out.update(step=step + 1, loss=loss)
+                if (step + 1) % args.ckpt_every == 0 or step + 1 == args.steps:
+                    ckpt.save(step + 1, state)
+        ckpt.wait()
+        return state
+
+    state = run_with_restarts(
+        make_state, run_from, ckpt=ckpt, state_like_fn=state_like,
+        shardings=shardings, max_restarts=args.max_restarts,
+    )
+    log.info("done: step=%d loss=%.4f", metrics_out.get("step", 0),
+             metrics_out.get("loss", float("nan")))
+    return metrics_out
+
+
+if __name__ == "__main__":
+    main()

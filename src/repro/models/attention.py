@@ -1,0 +1,202 @@
+"""GQA attention: full, blockwise (flash-style), and cached decode paths.
+
+* ``full``      — materialises (bq, kv) scores; used for train_4k.
+* ``blockwise`` — online-softmax over KV blocks with a python loop over query
+  blocks, so causal skipping is *static*: query block i only scans KV blocks
+  [0, ceil((i+1)·bq / bkv)), halving prefill FLOPs and keeping the largest
+  live buffer at (B, KV, G, bq, bkv).  This is the Rabe–Staats/Flash
+  adaptation for XLA; on real TPU the same schedule drops into a Pallas
+  flash kernel, but the dry-run must lower on the CPU backend, so the
+  memory-efficient schedule lives at the jnp level.
+* ``decode``    — one query position against a (B, S, KV, D) cache.
+
+All paths share GQA via a (KV, G) head split and compute softmax in f32.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ParamDef, dense_def
+
+Array = jax.Array
+
+_NEG = -1e30
+
+
+def attention_defs(cfg) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    defs = {
+        "wq": ParamDef((d, h * hd), ("fsdp", "heads"), scale=d**-0.5),
+        "wk": ParamDef((d, kv * hd), ("fsdp", "kv_heads"), scale=d**-0.5),
+        "wv": ParamDef((d, kv * hd), ("fsdp", "kv_heads"), scale=d**-0.5),
+        "wo": ParamDef((h * hd, d), ("heads", "fsdp"), scale=(h * hd) ** -0.5),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((h * hd,), ("heads",), init="zeros")
+        defs["bk"] = ParamDef((kv * hd,), ("kv_heads",), init="zeros")
+        defs["bv"] = ParamDef((kv * hd,), ("kv_heads",), init="zeros")
+    return defs
+
+
+def qkv_project(p: dict, x: Array, cfg, xkv: Array | None = None):
+    """-> q (B,S,H,D), k/v (B,T,KV,D). ``xkv`` enables cross-attention."""
+    b, s, _ = x.shape
+    xkv = x if xkv is None else xkv
+    t = xkv.shape[1]
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype))
+    k = (xkv @ p["wk"].astype(x.dtype))
+    v = (xkv @ p["wv"].astype(x.dtype))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    return (
+        q.reshape(b, s, h, hd),
+        k.reshape(b, t, kv, hd),
+        v.reshape(b, t, kv, hd),
+    )
+
+
+def out_project(p: dict, o: Array) -> Array:
+    b, s, h, hd = o.shape
+    return o.reshape(b, s, h * hd) @ p["wo"].astype(o.dtype)
+
+
+def _split_gqa(q: Array, num_kv: int) -> Array:
+    """(B, S, H, D) -> (B, S, KV, G, D)."""
+    b, s, h, d = q.shape
+    return q.reshape(b, s, num_kv, h // num_kv, d)
+
+
+def repeat_kv(k: Array, groups: int) -> Array:
+    """(B, T, KV, D) -> (B, T, KV*G, D): Megatron-style KV-head replication.
+
+    Under TP > kv_heads the grouped (KV, G) score layout cannot shard over
+    the model axis (the head reshape splits the sharded dim); replicating KV
+    up to the query head count keeps every attention tensor sharded H-ways.
+    Per device this is *smaller* than the replicated-KV fallback whenever
+    TP > G, and the broadcast is collective-free (source is replicated).
+    """
+    if groups == 1:
+        return k
+    b, t, kv, d = k.shape
+    k = jnp.broadcast_to(k[:, :, :, None, :], (b, t, kv, groups, d))
+    return k.reshape(b, t, kv * groups, d)
+
+
+def full_attention(q: Array, k: Array, v: Array, *, causal: bool) -> Array:
+    """q (B,S,H,D), k/v (B,T,KV,D) -> (B,S,H,D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    qg = _split_gqa(q, kvh) * (d**-0.5)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k).astype(jnp.float32)
+    if causal:
+        t = k.shape[1]
+        mask = jnp.tril(jnp.ones((s, t), jnp.bool_), k=t - s)
+        scores = jnp.where(mask[None, None, None], scores, _NEG)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def blockwise_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    block_q: int = 1024,
+    block_kv: int = 1024,
+) -> Array:
+    """Memory-efficient attention; q (B,S,H,D), k/v (B,T,KV,D)."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kvh = k.shape[2]
+    g = h // kvh
+    block_q = min(block_q, s)
+    block_kv = min(block_kv, t)
+    assert s % block_q == 0 and t % block_kv == 0, (s, t, block_q, block_kv)
+    nq, nkv = s // block_q, t // block_kv
+
+    qg = _split_gqa(q, kvh) * (d**-0.5)  # (B, S, KV, G, D)
+    kb = k.reshape(b, nkv, block_kv, kvh, d)
+    vb = v.reshape(b, nkv, block_kv, kvh, d)
+    offset = t - s if causal else 0  # query i attends keys <= i + offset
+
+    outs = []
+    for qi in range(nq):  # python loop: static causal skipping
+        q_blk = jax.lax.dynamic_slice_in_dim(qg, qi * block_q, block_q, axis=1)
+        q_hi = offset + (qi + 1) * block_q  # exclusive key bound
+        hi = min(nkv, -(-q_hi // block_kv)) if causal else nkv
+
+        def body(carry, kv_blk):
+            m, l, acc = carry
+            kj, vj, j = kv_blk
+            sc = jnp.einsum("bskgd,btkd->bkgst", q_blk, kj).astype(jnp.float32)
+            if causal:
+                qpos = offset + qi * block_q + jnp.arange(block_q)
+                kpos = j * block_kv + jnp.arange(block_kv)
+                msk = qpos[:, None] >= kpos[None, :]
+                sc = jnp.where(msk[None, None, None], sc, _NEG)
+            m_new = jnp.maximum(m, sc.max(axis=-1))
+            p = jnp.exp(sc - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + p.sum(axis=-1)
+            pv = jnp.einsum("bkgst,btkd->bkgsd", p.astype(q.dtype), vj)
+            acc_new = acc * alpha[..., None].astype(q.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kvh, g, block_q), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, kvh, g, block_q), jnp.float32)
+        a0 = jnp.zeros((b, kvh, g, block_q, d), q.dtype)
+        ks = jnp.moveaxis(kb[:, :hi], 1, 0)  # (hi, B, bkv, KV, D)
+        vs = jnp.moveaxis(vb[:, :hi], 1, 0)
+        js = jnp.arange(hi)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (ks, vs, js))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(q.dtype)
+        outs.append(jnp.moveaxis(out, 3, 1))  # (B, bq, KV, G, D)
+
+    return jnp.concatenate(outs, axis=1).reshape(b, s, h, d)
+
+
+def decode_attention(
+    q: Array, k_cache: Array, v_cache: Array, pos: Array | None = None
+) -> Array:
+    """q (B, 1, H, D) against cache (B, T, KV, D) -> (B, 1, H, D).
+
+    ``pos`` (scalar decode cursor) masks cache positions > pos, so caches
+    over-allocated to the generation budget attend only to written slots.
+    """
+    b, _, h, d = q.shape
+    kvh = k_cache.shape[2]
+    qg = _split_gqa(q, kvh) * (d**-0.5)
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache).astype(jnp.float32)
+    if pos is not None:
+        kpos = jnp.arange(k_cache.shape[1], dtype=jnp.int32)
+        sc = jnp.where(kpos <= pos, sc, _NEG)
+    probs = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", probs, v_cache)
+    return out.reshape(b, 1, h, d)
+
+
+def attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool,
+    block_q: int,
+    block_kv: int,
+    blockwise_threshold: int = 8192,
+) -> Array:
+    """Dispatch: full attention below the threshold, blockwise at/above."""
+    if q.shape[1] == 1:
+        return decode_attention(q, k, v)
+    if max(q.shape[1], k.shape[1]) >= blockwise_threshold:
+        return blockwise_attention(
+            q, k, v, causal=causal, block_q=block_q, block_kv=block_kv
+        )
+    return full_attention(q, k, v, causal=causal)

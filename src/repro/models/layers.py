@@ -1,0 +1,204 @@
+"""Parameter definitions + primitive layers (pure-functional, pytree params).
+
+Single-source-of-truth parameter system: every weight is declared once as a
+``ParamDef`` carrying shape, *logical* sharding axes, and init; the same def
+tree then yields (a) materialised params, (b) ``ShapeDtypeStruct`` stand-ins
+for the dry-run, and (c) ``NamedSharding`` trees — so shardings can never
+drift from shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+
+from repro.dist.sharding import ShardingRules, logical_to_spec
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    logical: tuple  # logical axis names (len == len(shape))
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def dense_def(d_in: int, d_out: int, logical=("fsdp", "ff"), dtype="float32"):
+    return ParamDef(
+        (d_in, d_out), logical, init="normal", scale=d_in ** -0.5, dtype=dtype
+    )
+
+
+def stack_defs(defs, n: int):
+    """Prepend a scan-over-layers axis to every def in the tree."""
+    return jax.tree.map(
+        lambda d: ParamDef(
+            (n,) + d.shape, ("none",) + d.logical, d.init, d.scale, d.dtype
+        ),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def init_params(defs, key: Array):
+    """Materialise a param pytree (path-keyed fold_in: order-independent)."""
+
+    def leaf(path, d: ParamDef):
+        h = int.from_bytes(
+            hashlib.md5(_path_str(path).encode()).digest()[:4], "little"
+        )
+        k = jax.random.fold_in(key, h)
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        return (jax.random.normal(k, d.shape, d.dtype) * d.scale).astype(d.dtype)
+
+    return jax.tree_util.tree_map_with_path(
+        leaf, defs, is_leaf=lambda x: isinstance(x, ParamDef)
+    )
+
+
+def param_shapes(defs):
+    """ShapeDtypeStruct tree (dry-run stand-ins; no allocation)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def param_specs(defs, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda d: logical_to_spec(d.logical, d.shape, mesh, rules),
+        defs,
+        is_leaf=lambda x: isinstance(x, ParamDef),
+    )
+
+
+def param_shardings(defs, mesh: Mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_specs(defs, mesh, rules),
+        is_leaf=lambda x: not isinstance(x, (dict, list, tuple)),
+    )
+
+
+def count_params(defs) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    total = 0
+    for d in leaves:
+        n = 1
+        for s in d.shape:
+            n *= s
+        total += n
+    return total
+
+
+# ---------------------------------------------------------------------------
+# primitive layers
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, w: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def layer_norm(x: Array, w: Array, b: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mu) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dt) * w.astype(dt) + b.astype(dt)
+
+
+def linear(x: Array, w: Array, b: Array | None = None) -> Array:
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def _id(x: Array) -> Array:
+    return x
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array,
+           constrain=_id) -> Array:
+    """``constrain`` pins the ff-sharded hidden (Megatron TP invariant)."""
+    g = jax.nn.silu(constrain(linear(x, w_gate)))
+    h = constrain(g * constrain(linear(x, w_up)))
+    return linear(h, w_down)
+
+
+def gelu_mlp(x: Array, w_in: Array, b_in, w_out: Array, b_out,
+             constrain=_id) -> Array:
+    return linear(constrain(jax.nn.gelu(constrain(linear(x, w_in, b_in)))),
+                  w_out, b_out)
+
+
+def norm_defs(d: int, norm_type: str = "rms") -> dict:
+    defs = {"w": ParamDef((d,), ("none",), init="ones")}
+    if norm_type == "ln":
+        defs["b"] = ParamDef((d,), ("none",), init="zeros")
+    return defs
+
+
+def norm_apply(p: dict, x: Array, norm_type: str = "rms", eps: float = 1e-5):
+    if norm_type == "ln":
+        return layer_norm(x, p["w"], p["b"], eps)
+    return rms_norm(x, p["w"], eps)
+
+
+def mlp_defs(d_model: int, d_ff: int, *, gated: bool = True, bias: bool = False):
+    if gated:
+        return {
+            "gate": dense_def(d_model, d_ff, ("fsdp", "ff")),
+            "up": dense_def(d_model, d_ff, ("fsdp", "ff")),
+            "down": dense_def(d_ff, d_model, ("ff", "fsdp")),
+        }
+    defs = {
+        "in": dense_def(d_model, d_ff, ("fsdp", "ff")),
+        "out": dense_def(d_ff, d_model, ("ff", "fsdp")),
+    }
+    if bias:
+        defs["b_in"] = ParamDef((d_ff,), ("ff",), init="zeros")
+        defs["b_out"] = ParamDef((d_model,), ("none",), init="zeros")
+    return defs
+
+
+def mlp_apply(p: dict, x: Array, *, gated: bool = True, constrain=_id) -> Array:
+    if gated:
+        return swiglu(x, p["gate"], p["up"], p["down"], constrain)
+    return gelu_mlp(x, p["in"], p.get("b_in"), p["out"], p.get("b_out"),
+                    constrain)
+
+
+def cross_entropy_loss(
+    logits: Array, targets: Array, mask: Array | None = None
+) -> Array:
+    """Mean next-token CE in nats; logits (B, S, V) f32, targets (B, S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,278 @@
+"""Mamba-2 block (state-space duality / SSD), chunked scan + recurrent decode.
+
+Implements the SSD algorithm of Mamba-2 [arXiv:2405.21060]: within-chunk
+quadratic attention-like einsums + an inter-chunk state recurrence, which is
+the TPU-friendly formulation (chunk einsums land on the MXU; the recurrence
+is an O(S/Q) ``lax.scan`` over small states).  Decode is the exact O(1)
+recurrence on a (B, H, P, N) state.
+
+Deviations from the reference CUDA kernel (recorded in DESIGN.md): the
+in-projection is split per stream (z/x/B/C/dt) so each weight shards cleanly
+on the model axis, and the depthwise causal conv runs as three small
+convs (x, B, C) instead of one fused channel block.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import ParamDef
+
+Array = jax.Array
+
+
+def mamba_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    heads = d_in // cfg.ssm_headdim
+    groups = 1
+    return d_in, heads, groups
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    n, k = cfg.ssm_state, cfg.ssm_conv
+    d_in, h, g = mamba_dims(cfg)
+    return {
+        "in_z": ParamDef((d, d_in), ("fsdp", "ff"), scale=d**-0.5),
+        "in_x": ParamDef((d, d_in), ("fsdp", "ff"), scale=d**-0.5),
+        "in_b": ParamDef((d, g * n), ("fsdp", "none"), scale=d**-0.5),
+        "in_c": ParamDef((d, g * n), ("fsdp", "none"), scale=d**-0.5),
+        "in_dt": ParamDef((d, h), ("fsdp", "ssm_heads"), scale=d**-0.5),
+        "conv_x": ParamDef((k, d_in), ("none", "ff"), scale=k**-0.5),
+        "conv_b": ParamDef((k, g * n), ("none", "none"), scale=k**-0.5),
+        "conv_c": ParamDef((k, g * n), ("none", "none"), scale=k**-0.5),
+        "dt_bias": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "a_log": ParamDef((h,), ("ssm_heads",), init="zeros"),
+        "d_skip": ParamDef((h,), ("ssm_heads",), init="ones"),
+        "norm": ParamDef((d_in,), ("ff",), init="ones"),
+        "out": ParamDef((d_in, d), ("ff", "fsdp"), scale=d_in**-0.5),
+    }
+
+
+def _causal_conv(x: Array, w: Array, cache: Array | None = None):
+    """Depthwise causal conv. x (B, S, C), w (K, C).
+
+    Returns (y, new_cache) where cache holds the last K-1 inputs.
+    """
+    k = w.shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache.astype(x.dtype), x], axis=1)
+        new_cache = ctx[:, -(k - 1):] if k > 1 else cache
+    else:
+        ctx = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+        new_cache = None
+    # (B, S+K-1, C) -> windows: y[t] = sum_j w[j] * ctx[t + j]
+    y = jnp.zeros_like(x)
+    s = x.shape[1]
+    for j in range(k):
+        y = y + ctx[:, j : j + s, :] * w[j].astype(x.dtype)
+    return y, new_cache
+
+
+def _segsum(a: Array) -> Array:
+    """a (..., Q) -> (..., Q, Q) lower-tri pairwise sums: out[q, t] =
+    sum_{i in (t, q]} a[i] for t <= q, -inf above the diagonal."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), jnp.bool_), k=0)
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(
+    x: Array,  # (B, S, H, P) inputs (already dt-scaled OUTSIDE? no: raw)
+    dt: Array,  # (B, S, H) positive
+    a: Array,  # (H,) negative decay rates
+    b: Array,  # (B, S, H, N)
+    c: Array,  # (B, S, H, N)
+    *,
+    chunk: int,
+    initial_state: Array | None = None,
+):
+    """SSD: y[t] = c[t]·state[t], state[t] = exp(a·dt[t])·state[t-1] + dt[t]·b[t]·x[t].
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    assert s % q == 0, (s, q)
+    nc = s // q
+
+    adt = a[None, None, :] * dt  # (B, S, H), negative
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    # chunked views: (B, NC, Q, ...)
+    xc = xdt.reshape(bsz, nc, q, h, p)
+    bc = b.reshape(bsz, nc, q, h, n)
+    cc = c.reshape(bsz, nc, q, h, n)
+    ac = adt.reshape(bsz, nc, q, h)
+
+    # --- intra-chunk (quadratic within chunk; MXU einsums) -----------------
+    l = jnp.exp(_segsum(jnp.moveaxis(ac, -1, -2)))  # (B, NC, H, Q, Q)
+    scores = jnp.einsum("bcqhn,bcthn->bchqt", cc, bc)  # (B, NC, H, Q, Q)
+    y_diag = jnp.einsum(
+        "bchqt,bcthp->bcqhp", (scores * l).astype(x.dtype), xc
+    )
+
+    # --- chunk states -------------------------------------------------------
+    cum = jnp.cumsum(ac, axis=2)  # (B, NC, Q, H)
+    total = cum[:, :, -1:, :]  # (B, NC, 1, H)
+    decay_to_end = jnp.exp(total - cum)  # (B, NC, Q, H)
+    states = jnp.einsum(
+        "bcqhn,bcqhp->bchpn", bc * decay_to_end[..., None].astype(bc.dtype), xc
+    )  # (B, NC, H, P, N)
+
+    # --- inter-chunk recurrence ---------------------------------------------
+    chunk_decay = jnp.exp(total[:, :, 0, :])  # (B, NC, H)
+    s0 = (
+        initial_state
+        if initial_state is not None
+        else jnp.zeros((bsz, h, p, n), x.dtype)
+    )
+
+    def step(carry, inp):
+        st, dec = inp  # (B, H, P, N), (B, H)
+        new = carry * dec[:, :, None, None].astype(carry.dtype) + st
+        return new, carry  # emit the state *entering* this chunk
+
+    (final_state, prev_states) = lax.scan(
+        step,
+        s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)),
+    )
+    prev_states = jnp.moveaxis(prev_states, 0, 1)  # (B, NC, H, P, N)
+
+    # --- inter-chunk contribution -------------------------------------------
+    decay_from_start = jnp.exp(cum)  # (B, NC, Q, H)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn->bcqhp",
+        (cc * decay_from_start[..., None].astype(cc.dtype)),
+        prev_states,
+    )
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p)
+    return y, final_state
+
+
+def ssd_recurrent_step(
+    state: Array,  # (B, H, P, N)
+    x: Array,  # (B, 1, H, P)
+    dt: Array,  # (B, 1, H)
+    a: Array,  # (H,)
+    b: Array,  # (B, 1, H, N)
+    c: Array,  # (B, 1, H, N)
+):
+    """Exact single-token recurrence for decode."""
+    adt = jnp.exp(a[None, :] * dt[:, 0])  # (B, H)
+    upd = jnp.einsum(
+        "bhn,bhp->bhpn", b[:, 0] * dt[:, 0, :, None].astype(b.dtype), x[:, 0]
+    )
+    new_state = state * adt[:, :, None, None].astype(state.dtype) + upd
+    y = jnp.einsum("bhn,bhpn->bhp", c[:, 0], new_state)[:, None]  # (B,1,H,P)
+    return y, new_state
+
+
+def _gated_rmsnorm(y: Array, z: Array, w: Array, eps: float) -> Array:
+    """Mamba-2 output norm: RMSNorm(y * silu(z)) * w."""
+    g = (y.astype(jnp.float32) * jax.nn.silu(z.astype(jnp.float32)))
+    var = jnp.mean(g * g, axis=-1, keepdims=True)
+    return (g * lax.rsqrt(var + eps)).astype(y.dtype) * w.astype(y.dtype)
+
+
+def mamba_apply(
+    p: dict,
+    xres: Array,  # (B, S, d) residual-stream input
+    *,
+    cfg,
+    cache: dict | None = None,
+    collect: bool = False,
+    constrain=lambda t: t,
+):
+    """Mamba-2 mixer. Returns (y (B,S,d), new_cache_or_None).
+
+    ``cache``: {"state": (B,H,P,N), "conv_x": (B,K-1,d_in),
+    "conv_b"/"conv_c": (B,K-1,g*n)} for decode; None for train/prefill.
+    ``collect=True`` (prefill) emits the final recurrent state + conv tails
+    as a fresh decode cache.
+    ``constrain`` pins channel-sharded intermediates to the model axis (the
+    same Megatron invariant as attention/MLP — without it XLA drops the TP
+    sharding of the in/out-projection gradients in bwd; §Perf cell A/jamba).
+    """
+    bsz, s, d = xres.shape
+    d_in, h, g = mamba_dims(cfg)
+    n, hd = cfg.ssm_state, cfg.ssm_headdim
+    decode = cache is not None
+
+    z = constrain(xres @ p["in_z"].astype(xres.dtype))  # (B, S, d_in)
+    xs = constrain(xres @ p["in_x"].astype(xres.dtype))
+    bs = xres @ p["in_b"].astype(xres.dtype)  # (B, S, g*n): tiny, replicated
+    cs = xres @ p["in_c"].astype(xres.dtype)
+    dt_raw = constrain(xres @ p["in_dt"].astype(xres.dtype))  # (B, S, H)
+
+    if collect and not decode:
+        k = cfg.ssm_conv
+        pre_x, pre_b, pre_c = xs, bs, cs  # pre-conv streams feed the cache
+
+    xs, cache_x = _causal_conv(
+        xs, p["conv_x"], cache["conv_x"] if decode else None
+    )
+    bs, cache_b = _causal_conv(
+        bs, p["conv_b"], cache["conv_b"] if decode else None
+    )
+    cs, cache_c = _causal_conv(
+        cs, p["conv_c"], cache["conv_c"] if decode else None
+    )
+    xs, bs, cs = jax.nn.silu(xs), jax.nn.silu(bs), jax.nn.silu(cs)
+
+    dt = jax.nn.softplus(
+        dt_raw.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32)
+    )  # (B, S, H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))  # (H,)
+
+    xh = xs.reshape(bsz, s, h, hd)
+    # ngroups == 1: broadcast the single B/C group across all SSM heads.
+    bh = jnp.broadcast_to(bs[:, :, None, :], (bsz, s, h, n))
+    ch = jnp.broadcast_to(cs[:, :, None, :], (bsz, s, h, n))
+
+    if decode:
+        y, new_state = ssd_recurrent_step(cache["state"], xh, dt, a, bh, ch)
+    else:
+        y, new_state = ssd_chunked(xh, dt, a, bh, ch, chunk=cfg.ssm_chunk)
+
+    y = y + xh * p["d_skip"].astype(y.dtype)[None, None, :, None]
+    y = constrain(y.reshape(bsz, s, d_in))
+    y = constrain(_gated_rmsnorm(y, z, p["norm"], cfg.norm_eps))
+    out = y @ p["out"].astype(y.dtype)
+
+    if decode:
+        new_cache = {
+            "state": new_state,
+            "conv_x": cache_x,
+            "conv_b": cache_b,
+            "conv_c": cache_c,
+        }
+        return out, new_cache
+    if collect:
+        return out, {
+            "state": new_state,
+            "conv_x": pre_x[:, -(k - 1):],
+            "conv_b": pre_b[:, -(k - 1):],
+            "conv_c": pre_c[:, -(k - 1):],
+        }
+    return out, None
+
+
+def mamba_cache_defs(cfg, batch: int) -> dict:
+    """ShapeDtype spec dict for the decode cache of one mamba layer."""
+    d_in, h, g = mamba_dims(cfg)
+    n, k = cfg.ssm_state, cfg.ssm_conv
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "state": jax.ShapeDtypeStruct((batch, h, cfg.ssm_headdim, n), dt),
+        "conv_x": jax.ShapeDtypeStruct((batch, k - 1, d_in), dt),
+        "conv_b": jax.ShapeDtypeStruct((batch, k - 1, g * n), dt),
+        "conv_c": jax.ShapeDtypeStruct((batch, k - 1, g * n), dt),
+    }

@@ -1,0 +1,394 @@
+"""build_model(): one bundle per architecture — defs, losses, serve steps,
+input/cache specs and shardings for every (arch × shape × mesh) cell."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.dist.sharding import ShardingRules, rules_for
+from repro.models import encdec as encdec_mod
+from repro.models import mamba as mamba_mod
+from repro.models.layers import (
+    ParamDef,
+    cross_entropy_loss,
+    init_params,
+    norm_apply,
+    norm_defs,
+    param_shapes,
+    param_specs,
+    count_params,
+)
+from repro.models.transformer import RunCtx, group_pattern, stack_apply, stack_defs_tree
+
+Array = jax.Array
+
+AUX_COEF = 0.01
+
+
+def _pad_vocab(v: int, multiple: int = 16) -> int:
+    return -(-v // multiple) * multiple
+
+
+@dataclasses.dataclass
+class ModelBundle:
+    cfg: ModelConfig
+    mesh: Optional[Mesh]
+    defs: dict
+    rules: ShardingRules
+
+    # ------------------------------------------------------------------ params
+    def init(self, key: Array):
+        return init_params(self.defs, key)
+
+    def shapes(self):
+        return param_shapes(self.defs)
+
+    def specs(self):
+        if self.mesh is None:
+            return jax.tree.map(
+                lambda d: P(), self.defs,
+                is_leaf=lambda x: isinstance(x, ParamDef),
+            )
+        return param_specs(self.defs, self.mesh, self.rules)
+
+    def shardings(self):
+        assert self.mesh is not None
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.specs(),
+            is_leaf=lambda x: isinstance(x, P),
+        )
+
+    def num_params(self) -> int:
+        return count_params(self.defs)
+
+    # ------------------------------------------------------------------ ctx
+    def _ctx(self, positions, pos=None, causal=True, collect=False) -> RunCtx:
+        return RunCtx(
+            cfg=self.cfg,
+            mesh=self.mesh,
+            positions=positions,
+            pos=pos,
+            causal=causal,
+            collect_cache=collect,
+        )
+
+    def _batch_axes(self) -> tuple:
+        if self.mesh is None:
+            return ()
+        return tuple(a for a in ("pod", "data") if a in self.mesh.shape)
+
+    # ------------------------------------------------------------------ forward
+    def _embed_in(self, params, batch, ctx):
+        cfg = self.cfg
+        dt = jnp.dtype(cfg.dtype)
+        if "embeds" in batch:  # modality-stub inputs (vlm/audio prefill)
+            return batch["embeds"].astype(dt)
+        # text path (always present: decode generates tokens)
+        return jnp.take(params["embed"], batch["tokens"], axis=0).astype(dt)
+
+    def _decoder_logits(self, params, x, ctx, caches):
+        cfg = self.cfg
+        x, aux, new_caches = stack_apply(params, x, ctx, caches)
+        x = norm_apply(params["final_norm"], x, cfg.norm_type, cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = jnp.einsum(
+                "bsd,vd->bsv", x, params["embed"].astype(x.dtype)
+            )
+        else:
+            logits = x @ params["unembed"].astype(x.dtype)
+        # vocab-sharded logits: keeps the unembed grad + CE logsumexp sharded
+        return ctx.constrain_tp(logits, 2), aux, new_caches
+
+    def train_loss(self, params, batch):
+        """-> (loss, metrics). Batch per-family (see input_specs)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            return self._encdec_loss(params, batch)
+        b, s = batch["targets"].shape
+        positions = batch.get(
+            "positions",
+            jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+        )
+        ctx = self._ctx(positions)
+        x = self._embed_in(params, batch, ctx)
+        x = ctx.constrain_residual(x)
+        logits, aux, _ = self._decoder_logits(params, x, ctx, None)
+        loss = cross_entropy_loss(logits, batch["targets"])
+        total = loss + AUX_COEF * aux
+        return total, {"loss": loss, "aux_loss": aux}
+
+    def _encdec_loss(self, params, batch):
+        cfg = self.cfg
+        ctx = self._ctx(None, causal=False)
+        enc_out = encdec_mod.encode(params, batch["enc_embeds"], ctx)
+        dctx = self._ctx(None, causal=True)
+        dec_in = encdec_mod.embed_decoder_tokens(
+            params, batch["dec_tokens"], dctx, 0
+        )
+        dec_in = dctx.constrain_residual(dec_in)
+        logits, _ = encdec_mod.decode_stack(params, dec_in, dctx, enc_out, None)
+        loss = cross_entropy_loss(logits, batch["targets"])
+        return loss, {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+    # ------------------------------------------------------------------ serving
+    def prefill(self, params, batch):
+        """Forward pass emitting (last-position logits, decode caches)."""
+        cfg = self.cfg
+        if cfg.is_encdec:
+            ctx = self._ctx(None, causal=False, collect=True)
+            enc_out = encdec_mod.encode(params, batch["enc_embeds"], ctx)
+            dctx = self._ctx(None, causal=True, collect=True)
+            dec_in = encdec_mod.embed_decoder_tokens(
+                params, batch["dec_tokens"], dctx, 0
+            )
+            logits, caches = encdec_mod.decode_stack(
+                params, dec_in, dctx, enc_out, None
+            )
+            return logits[:, -1], caches
+        b, s = (
+            batch["tokens"].shape
+            if "tokens" in batch
+            else batch["embeds"].shape[:2]
+        )
+        positions = batch.get(
+            "positions",
+            jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s)),
+        )
+        ctx = self._ctx(positions, collect=True)
+        x = self._embed_in(params, batch, ctx)
+        x = ctx.constrain_residual(x)
+        logits, _, caches = self._decoder_logits(params, x, ctx, None)
+        return logits[:, -1], caches
+
+    def serve_step(self, params, batch):
+        """One decode step: batch = {tokens (B,1), pos (), caches}."""
+        cfg = self.cfg
+        pos = batch["pos"]
+        tokens = batch["tokens"]
+        b = tokens.shape[0]
+        if cfg.is_encdec:
+            dctx = self._ctx(
+                jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32), pos=pos
+            )
+            dec_in = encdec_mod.embed_decoder_tokens(params, tokens, dctx, pos)
+            logits, caches = encdec_mod.decode_stack(
+                params, dec_in, dctx, None, batch["caches"]
+            )
+            return logits, caches
+        positions = jnp.broadcast_to(pos, (b, 1)).astype(jnp.int32)
+        if cfg.mrope_sections:
+            positions = jnp.broadcast_to(pos, (b, 1, 3)).astype(jnp.int32)
+        ctx = self._ctx(positions, pos=pos)
+        x = self._embed_in(params, {"tokens": tokens}, ctx)
+        logits, _, caches = self._decoder_logits(
+            params, x, ctx, batch["caches"]
+        )
+        return logits, caches
+
+    # ------------------------------------------------------------------ specs
+    def _cache_shapes(self, shape: ShapeConfig):
+        """Decode-cache ShapeDtypeStructs, keyed like stack_apply expects."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        kv, hd = cfg.num_kv_heads, cfg.head_dim
+        if cfg.is_encdec:
+            n = cfg.decoder_layers
+            kvs = jax.ShapeDtypeStruct((n, b, s, kv, hd), dt)
+            return {
+                "k": kvs, "v": kvs,
+                "xk": jax.ShapeDtypeStruct((n, b, s, kv, hd), dt),
+                "xv": jax.ShapeDtypeStruct((n, b, s, kv, hd), dt),
+            }
+        pattern = group_pattern(cfg)
+        ng = cfg.num_layers // len(pattern)
+        out = {}
+        for j, (kind, _) in enumerate(pattern):
+            if kind == "attn":
+                sds = jax.ShapeDtypeStruct((ng, b, s, kv, hd), dt)
+                out[f"g{j}"] = {"attn": {"k": sds, "v": sds}}
+            else:
+                md = mamba_mod.mamba_cache_defs(cfg, b)
+                out[f"g{j}"] = {
+                    "ssm": jax.tree.map(
+                        lambda x: jax.ShapeDtypeStruct((ng,) + x.shape, x.dtype),
+                        md,
+                    )
+                }
+        return out
+
+    def _cache_specs(self, shape: ShapeConfig):
+        """PartitionSpecs mirroring _cache_shapes."""
+        cfg = self.cfg
+        mesh = self.mesh
+        ba = self._batch_axes()
+        b, s = shape.global_batch, shape.seq_len
+
+        def ext(axes):
+            e = 1
+            for a in axes:
+                e *= mesh.shape[a]
+            return e
+
+        batch_ax = ba if (ba and b % ext(ba) == 0) else None
+        model_ok = mesh is not None and "model" in mesh.shape
+        kv_ax = (
+            "model"
+            if model_ok and cfg.num_kv_heads % mesh.shape["model"] == 0
+            else None
+        )
+        # If neither batch nor kv shard, spread the sequence axis.
+        seq_axes = []
+        if model_ok and kv_ax is None:
+            seq_axes.append("model")
+        if batch_ax is None and ba:
+            seq_axes = [a for a in ba] + seq_axes
+        seq_ax = tuple(seq_axes) if seq_axes and s % ext(seq_axes) == 0 else None
+
+        kv_spec = P(None, batch_ax, seq_ax, kv_ax, None)
+        if cfg.is_encdec:
+            return {"k": kv_spec, "v": kv_spec, "xk": kv_spec, "xv": kv_spec}
+
+        d_in, h, g = mamba_mod.mamba_dims(cfg)
+        h_ax = "model" if model_ok and h % mesh.shape["model"] == 0 else None
+        c_ax = "model" if model_ok and d_in % mesh.shape["model"] == 0 else None
+        ssm_spec = {
+            "state": P(None, batch_ax, h_ax, None, None),
+            "conv_x": P(None, batch_ax, None, c_ax),
+            "conv_b": P(None, batch_ax, None, None),
+            "conv_c": P(None, batch_ax, None, None),
+        }
+        pattern = group_pattern(cfg)
+        out = {}
+        for j, (kind, _) in enumerate(pattern):
+            if kind == "attn":
+                out[f"g{j}"] = {"attn": {"k": kv_spec, "v": kv_spec}}
+            else:
+                out[f"g{j}"] = {"ssm": dict(ssm_spec)}
+        return out
+
+    def input_specs(self, shape: ShapeConfig):
+        """ShapeDtypeStructs for every model input of this shape cell."""
+        cfg = self.cfg
+        b, s = shape.global_batch, shape.seq_len
+        dt = jnp.dtype(cfg.dtype)
+        i32 = jnp.int32
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                return {
+                    "enc_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "dec_tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "targets": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            out = {"targets": jax.ShapeDtypeStruct((b, s), i32)}
+            if cfg.input_mode == "embeddings":
+                out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+            else:
+                out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.mrope_sections:
+                out["positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+            return out
+        if shape.kind == "prefill":
+            if cfg.is_encdec:
+                return {
+                    "enc_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dt),
+                    "dec_tokens": jax.ShapeDtypeStruct((b, s), i32),
+                }
+            out = {}
+            if cfg.input_mode == "embeddings":
+                out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+            else:
+                out["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+            if cfg.mrope_sections:
+                out["positions"] = jax.ShapeDtypeStruct((b, s, 3), i32)
+            return out
+        # decode
+        return {
+            "tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+            "caches": self._cache_shapes(shape),
+        }
+
+    def input_shardings(self, shape: ShapeConfig):
+        """PartitionSpec tree matching input_specs."""
+        cfg = self.cfg
+        ba = self._batch_axes()
+        mesh = self.mesh
+
+        def ext(axes):
+            e = 1
+            for a in axes:
+                e *= mesh.shape[a]
+            return e
+
+        b = shape.global_batch
+        batch_ax = ba if (ba and b % ext(ba) == 0) else None
+        sa = (
+            "model"
+            if mesh is not None
+            and "model" in mesh.shape
+            and cfg.seq_shard_activations
+            and shape.seq_len % mesh.shape["model"] == 0
+            else None
+        )
+        tok = P(batch_ax, None)
+        emb = P(batch_ax, sa, None)
+        if shape.kind == "train":
+            if cfg.is_encdec:
+                return {
+                    "enc_embeds": emb, "dec_tokens": tok, "targets": tok,
+                }
+            out = {"targets": tok}
+            if cfg.input_mode == "embeddings":
+                out["embeds"] = emb
+            else:
+                out["tokens"] = tok
+            if cfg.mrope_sections:
+                out["positions"] = P(batch_ax, None, None)
+            return out
+        if shape.kind == "prefill":
+            if cfg.is_encdec:
+                return {"enc_embeds": emb, "dec_tokens": tok}
+            out = {}
+            if cfg.input_mode == "embeddings":
+                out["embeds"] = emb
+            else:
+                out["tokens"] = tok
+            if cfg.mrope_sections:
+                out["positions"] = P(batch_ax, None, None)
+            return out
+        return {
+            "tokens": P(batch_ax, None),
+            "pos": P(),
+            "caches": self._cache_specs(shape),
+        }
+
+
+def build_model(cfg: ModelConfig, mesh: Mesh | None = None) -> ModelBundle:
+    """Construct the bundle (param defs + fns) for one architecture."""
+    vocab = _pad_vocab(cfg.vocab_size)
+    if vocab != cfg.vocab_size:
+        cfg = dataclasses.replace(cfg, vocab_size=vocab)
+    rules = (
+        rules_for(mesh, fsdp=cfg.fsdp, seq_shard=cfg.seq_shard_activations)
+        if mesh is not None
+        else ShardingRules()
+    )
+    if cfg.is_encdec:
+        defs = encdec_mod.encdec_defs(cfg)
+    else:
+        d, v = cfg.d_model, vocab
+        defs = dict(stack_defs_tree(cfg))
+        # Embeddings-stub archs still decode text: keep the embed table for
+        # serve_step's token path.
+        defs["embed"] = ParamDef((v, d), ("vocab", "fsdp"), scale=0.02)
+        defs["final_norm"] = norm_defs(d, cfg.norm_type)
+        if not cfg.tie_embeddings:
+            defs["unembed"] = ParamDef((d, v), ("fsdp", "vocab"), scale=d**-0.5)
+    return ModelBundle(cfg=cfg, mesh=mesh, defs=defs, rules=rules)

@@ -1,0 +1,83 @@
+"""Rotary position embeddings: standard RoPE + M-RoPE (Qwen2-VL) + sinusoidal.
+
+M-RoPE splits the head_dim/2 frequency slots into (t, h, w) sections, each
+rotated by its own position stream; for pure-text streams all three position
+ids coincide and M-RoPE reduces exactly to RoPE (tested invariant).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    """(head_dim/2,) inverse frequencies."""
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: Array, cos: Array, sin: Array) -> Array:
+    """x (..., D) with interleaved-half convention: [x1, x2] halves."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+def apply_rope(
+    x: Array, positions: Array, *, theta: float = 1e4
+) -> Array:
+    """x (B, S, H, D), positions (B, S) int -> rotated x."""
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]  # (B, S, 1, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def apply_mrope(
+    x: Array, positions: Array, sections: tuple, *, theta: float = 1e4
+) -> Array:
+    """Qwen2-VL multimodal RoPE.
+
+    x (B, S, H, D); positions (B, S, 3) = (t, h, w) ids; ``sections`` splits
+    the D/2 frequency slots, sum(sections) == D//2.
+    """
+    half = x.shape[-1] // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(x.shape[-1], theta)  # (D/2,)
+    # angle per position stream: (B, S, 3, D/2)
+    ang_all = positions[..., None].astype(jnp.float32) * freqs[None, None, None]
+    # Per-frequency-slot stream selector: slot i of D/2 belongs to stream
+    # idx[i] in {0=t, 1=h, 2=w}; gather that stream's angle per slot.
+    idx = jnp.repeat(
+        jnp.arange(3), jnp.asarray(sections), total_repeat_length=half
+    )  # (D/2,)
+    ang = jnp.take_along_axis(
+        jnp.moveaxis(ang_all, 2, 3),  # (B, S, D/2, 3)
+        idx[None, None, :, None].astype(jnp.int32),
+        axis=3,
+    )[..., 0]  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin)
+
+
+def text_mrope_positions(positions: Array) -> Array:
+    """(B, S) -> (B, S, 3): text tokens use identical t/h/w ids."""
+    return jnp.broadcast_to(positions[..., None], positions.shape + (3,))
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> Array:
+    """Whisper-style fixed sinusoidal table (S, D)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    ang = pos / (10000.0 ** (dim / d_model))
+    out = jnp.zeros((seq_len, d_model), jnp.float32)
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,307 @@
+"""Decoder stack assembly: scan-over-layer-groups, remat, SP residual stream.
+
+One machinery covers all decoder-only families:
+
+* uniform stacks (dense / MoE / SSM / VLM): group size 1, scanned L times;
+* hybrid (Jamba): group = ``attn_period`` layers with a static intra-group
+  pattern (attn at ``attn_offset``, MoE every ``moe_period``), scanned
+  L/period times — heterogeneous layers become a homogeneous scan.
+
+The residual stream is optionally sequence-sharded between blocks
+(Megatron-SP): XLA inserts the all-gather before attention QKV and the
+reduce-scatter after the output projections.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models.layers import (
+    ParamDef,
+    mlp_apply,
+    mlp_defs,
+    norm_apply,
+    norm_defs,
+)
+from repro.models.rope import apply_mrope, apply_rope, text_mrope_positions
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class RunCtx:
+    """Per-call runtime context (mesh, positions, decode cursor)."""
+
+    cfg: Any
+    mesh: Optional[Mesh]
+    batch_axes: tuple = ("pod", "data")
+    seq_axis: Optional[str] = "model"
+    positions: Optional[Array] = None  # (B, S) or (B, S, 3) for M-RoPE
+    pos: Optional[Array] = None  # scalar decode cursor
+    causal: bool = True
+    collect_cache: bool = False  # prefill: emit per-layer caches
+
+    def axes(self):
+        if self.mesh is None:
+            return (), None
+        ba = tuple(a for a in self.batch_axes if a in self.mesh.shape)
+        sa = self.seq_axis if (
+            self.seq_axis in self.mesh.shape and self.cfg.seq_shard_activations
+        ) else None
+        return ba, sa
+
+    def constrain_residual(self, x: Array) -> Array:
+        """Residual stream sharding: P(batch, seq(SP), None)."""
+        if self.mesh is None:
+            return x
+        ba, sa = self.axes()
+        if x.shape[1] == 1:
+            sa = None  # decode: a single position cannot be sequence-sharded
+        elif sa is not None and x.shape[1] % self.mesh.shape[sa] != 0:
+            sa = None
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(ba, sa, None))
+        )
+
+    def constrain_tp(self, x: Array, tp_dim: int) -> Array:
+        """Pin a tensor-parallel intermediate: batch on dim 0, ``tp_dim``
+        sharded over the model axis.
+
+        This is the Megatron invariant that keeps the BACKWARD pass sharded:
+        without it, XLA's sharding propagation through scan+remat can drop
+        the TP annotation of the MLP hidden / attention heads, materialise
+        *full-size* f32 weight gradients per layer, and sync them with a
+        model-axis all-reduce — measured at 87% of all collective bytes on
+        qwen1.5-110b/train_4k before this constraint (EXPERIMENTS.md §Perf).
+        """
+        if self.mesh is None or "model" not in self.mesh.shape:
+            return x
+        if getattr(self.cfg, "tp_style", "megatron") != "megatron":
+            return x  # "gather" style: let XLA move weights, not tokens
+        ba, _ = self.axes()
+        spec: list = [None] * x.ndim
+        ext = 1
+        for a in ba:
+            ext *= self.mesh.shape[a]
+        if ba and x.shape[0] % ext == 0:
+            spec[0] = ba
+        if x.shape[tp_dim] % self.mesh.shape["model"] == 0:
+            spec[tp_dim] = "model"
+        return lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec))
+        )
+
+
+# ---------------------------------------------------------------------------
+# per-layer defs / apply
+# ---------------------------------------------------------------------------
+
+def layer_defs(cfg, kind: str, ffn_kind: str) -> dict:
+    d = cfg.d_model
+    defs: dict = {"ln1": norm_defs(d, cfg.norm_type)}
+    if kind == "attn":
+        defs["attn"] = attn_mod.attention_defs(cfg)
+    else:
+        defs["ssm"] = mamba_mod.mamba_defs(cfg)
+    if ffn_kind == "dense":
+        defs["ln2"] = norm_defs(d, cfg.norm_type)
+        defs["mlp"] = mlp_defs(
+            d, cfg.d_ff, gated=cfg.mlp_gated, bias=not cfg.mlp_gated
+        )
+    elif ffn_kind == "moe":
+        defs["ln2"] = norm_defs(d, cfg.norm_type)
+        defs["moe"] = moe_mod.moe_defs(cfg)
+    return defs
+
+
+def _apply_rope_qk(q, k, ctx: RunCtx):
+    cfg = ctx.cfg
+    if cfg.mrope_sections:
+        pos = ctx.positions
+        if pos.ndim == 2:  # text-only stream: t=h=w
+            pos = text_mrope_positions(pos)
+        q = apply_mrope(q, pos, cfg.mrope_sections, theta=cfg.rope_theta)
+        k = apply_mrope(k, pos, cfg.mrope_sections, theta=cfg.rope_theta)
+    else:
+        q = apply_rope(q, ctx.positions, theta=cfg.rope_theta)
+        k = apply_rope(k, ctx.positions, theta=cfg.rope_theta)
+    return q, k
+
+
+def attn_block(p: dict, h: Array, ctx: RunCtx, cache: dict | None):
+    cfg = ctx.cfg
+    q, k, v = attn_mod.qkv_project(p, h, cfg)
+    if cfg.use_rope:
+        q, k = _apply_rope_qk(q, k, ctx)
+    if cache is not None:
+        # decode: write this step's K/V at the cursor, attend over the cache.
+        kc = lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), ctx.pos, axis=1
+        )
+        vc = lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), ctx.pos, axis=1
+        )
+        out = attn_mod.decode_attention(q, kc, vc, ctx.pos)
+        return attn_mod.out_project(p, out), {"k": kc, "v": vc}
+    # Decode caches keep the compact KV-head layout; compute replicates KV
+    # heads up to H so scores/probs shard over the model axis (see
+    # attn_mod.repeat_kv) and pins every head tensor with constrain_tp —
+    # the Megatron TP invariant that keeps weight grads sharded in bwd.
+    new_cache = {"k": k, "v": v} if ctx.collect_cache else None
+    # Repeat KV heads up to H ONLY when H shards over the model axis —
+    # otherwise the repeated (replicated) K/V and the (B, H, S, S) probs
+    # blow up by the group factor (measured: minitron 24H on tp=16 went to
+    # 101 GiB/device before this guard; see EXPERIMENTS.md §Perf).
+    tp = ctx.mesh.shape["model"] if (
+        ctx.mesh is not None and "model" in ctx.mesh.shape
+    ) else 1
+    if cfg.tp_style == "megatron" and q.shape[2] % tp == 0 and tp > 1:
+        k = attn_mod.repeat_kv(k, q.shape[2] // k.shape[2])
+        v = attn_mod.repeat_kv(v, q.shape[2] // v.shape[2])
+        q = ctx.constrain_tp(q, 2)
+        k = ctx.constrain_tp(k, 2)
+        v = ctx.constrain_tp(v, 2)
+    out = attn_mod.attention(
+        q, k, v,
+        causal=ctx.causal,
+        block_q=cfg.attn_block_q,
+        block_kv=cfg.attn_block_kv,
+        blockwise_threshold=cfg.blockwise_attn_threshold,
+    )
+    out = ctx.constrain_tp(out, 2)
+    return attn_mod.out_project(p, out), new_cache
+
+
+def block_apply(
+    p: dict,
+    x: Array,
+    ctx: RunCtx,
+    kind: str,
+    ffn_kind: str,
+    cache: dict | None,
+):
+    """One transformer block. Returns (x, aux_loss, new_cache)."""
+    cfg = ctx.cfg
+    h = norm_apply(p["ln1"], x, cfg.norm_type, cfg.norm_eps)
+    emit = cache is not None or ctx.collect_cache
+    new_cache = None
+    if kind == "attn":
+        mix, sub = attn_block(
+            p["attn"], h, ctx, cache.get("attn") if cache else None
+        )
+        if emit:
+            new_cache = {"attn": sub}
+    else:
+        mix, sub = mamba_mod.mamba_apply(
+            p["ssm"], h, cfg=cfg, cache=cache.get("ssm") if cache else None,
+            collect=ctx.collect_cache,
+            constrain=lambda t: ctx.constrain_tp(t, t.ndim - 1),
+        )
+        if emit:
+            new_cache = {"ssm": sub}
+    # Constrain the projection output *before* the add: the partial-sum of
+    # the TP out-projection then lowers as a reduce-scatter onto the
+    # seq-sharded residual instead of a full-size all-reduce (XLA's CPU
+    # pipeline lacks the AR->RS rewrite pass; see EXPERIMENTS.md §Perf).
+    x = ctx.constrain_residual(x + ctx.constrain_residual(mix))
+
+    aux = jnp.zeros((), jnp.float32)
+    if ffn_kind == "dense":
+        h2 = norm_apply(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        y = mlp_apply(
+            p["mlp"], h2, gated=cfg.mlp_gated,
+            constrain=lambda t: ctx.constrain_tp(t, 2),
+        )
+        x = ctx.constrain_residual(x + ctx.constrain_residual(y))
+    elif ffn_kind == "moe":
+        h2 = norm_apply(p["ln2"], x, cfg.norm_type, cfg.norm_eps)
+        ba, _ = ctx.axes()
+        y, aux = moe_mod.moe_apply(
+            p["moe"], h2, cfg=cfg, mesh=ctx.mesh, batch_axes=ba
+        )
+        x = ctx.constrain_residual(x + y)
+    return x, aux, new_cache
+
+
+# ---------------------------------------------------------------------------
+# group pattern + stack
+# ---------------------------------------------------------------------------
+
+def group_pattern(cfg) -> list[tuple[str, str]]:
+    """Static (mixer_kind, ffn_kind) pattern of one scan group."""
+    period = cfg.attn_period if cfg.family == "hybrid" else 1
+    return [(cfg.layer_kind(j), cfg.ffn_kind(j)) for j in range(period)]
+
+
+def stack_defs_tree(cfg) -> dict:
+    """{'g0': defs, 'g1': ...} one entry per intra-group position, each to be
+    scanned over L/period groups."""
+    from repro.models.layers import stack_defs
+
+    pattern = group_pattern(cfg)
+    n_groups = cfg.num_layers // len(pattern)
+    assert cfg.num_layers % len(pattern) == 0, (cfg.num_layers, len(pattern))
+    return {
+        f"g{j}": stack_defs(layer_defs(cfg, kind, ffn), n_groups)
+        for j, (kind, ffn) in enumerate(pattern)
+    }
+
+
+def _remat(fn, mode: str):
+    if mode == "none":
+        return fn
+    if mode == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    return jax.checkpoint(fn)  # "full": save nothing inside the block
+
+
+def stack_apply(
+    params: dict, x: Array, ctx: RunCtx, caches: dict | None
+):
+    """Run the full layer stack. caches: {'g{j}': stacked cache} or None.
+
+    Returns (x, total_aux, new_caches_or_None).
+    """
+    cfg = ctx.cfg
+    pattern = group_pattern(cfg)
+
+    def group_body(carry, xs):
+        x, aux = carry
+        new_caches = {}
+        for j, (kind, ffn) in enumerate(pattern):
+            p_j = xs[f"g{j}"]
+            c_j = xs.get(f"cache_g{j}")
+
+            def fn(p, xx, cc, _kind=kind, _ffn=ffn):
+                return block_apply(p, xx, ctx, _kind, _ffn, cc)
+
+            x, aux_j, nc = _remat(fn, cfg.remat)(p_j, x, c_j)
+            aux = aux + aux_j
+            if nc is not None:
+                new_caches[f"cache_g{j}"] = nc
+        return (x, aux), new_caches
+
+    xs = {k: v for k, v in params.items() if k.startswith("g")}
+    if caches is not None:
+        xs.update({f"cache_{k}": v for k, v in caches.items()})
+    (x, aux), new_caches_stacked = lax.scan(
+        group_body, (x, jnp.zeros((), jnp.float32)), xs
+    )
+    if caches is not None or ctx.collect_cache:
+        new_caches = {
+            k[len("cache_"):]: v for k, v in new_caches_stacked.items()
+        }
+        return x, aux, new_caches
+    return x, aux, None

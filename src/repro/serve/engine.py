@@ -1,0 +1,127 @@
+"""Batched serving engine: prefill -> cache grow -> jitted decode loop.
+
+Wave batching: requests are grouped into fixed-size waves (padded with
+replicas of the last prompt); each wave shares a prompt length (shorter
+prompts are left-padded by the caller or bucketed by ``ServeEngine.serve``).
+Decode runs one jitted ``serve_step`` per token with the cache donated, so
+steady-state decode allocates nothing.
+
+Per-row cursors (continuous batching) are roadmap: they need per-row cache
+scatter; the wave design keeps serve_step identical to the dry-run cell.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+
+
+def _pad_caches(caches, new_len: int):
+    """Grow attention K/V caches (ng, B, S, KV, D) along S; SSM states pass."""
+
+    def grow(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", "")) for p in path]
+        if any(n in ("k", "v") for n in names) and not any(
+            n in ("xk", "xv", "ssm") for n in names
+        ):
+            pad = new_len - leaf.shape[2]
+            if pad > 0:
+                cfgpad = [(0, 0)] * leaf.ndim
+                cfgpad[2] = (0, pad)
+                return jnp.pad(leaf, cfgpad)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(grow, caches)
+
+
+class ServeEngine:
+    """Greedy/temperature decoding over a ModelBundle (decoder-only)."""
+
+    def __init__(self, bundle, params, *, temperature: float = 0.0, seed: int = 0):
+        if bundle.cfg.is_encdec:
+            raise NotImplementedError(
+                "ServeEngine drives decoder-only families; whisper-style "
+                "enc-dec serving goes through examples/whisper_stub.py"
+            )
+        self.bundle = bundle
+        self.params = params
+        self.temperature = temperature
+        self._key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(bundle.prefill)
+        self._step = jax.jit(bundle.serve_step, donate_argnums=(1,))
+
+    # ------------------------------------------------------------------ wave
+    def _sample(self, logits: Array) -> Array:
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self._key, sub = jax.random.split(self._key)
+        return jax.random.categorical(
+            sub, logits / self.temperature, axis=-1
+        ).astype(jnp.int32)
+
+    def generate_wave(
+        self,
+        prompts: np.ndarray,  # (B, S) int32, equal-length wave
+        max_new_tokens: int,
+        eos_id: Optional[int] = None,
+    ) -> np.ndarray:
+        b, s = prompts.shape
+        tokens = jnp.asarray(prompts, jnp.int32)
+        last_logits, caches = self._prefill(self.params, {"tokens": tokens})
+        caches = _pad_caches(caches, s + max_new_tokens)
+        out = np.zeros((b, max_new_tokens), np.int32)
+        next_tok = self._sample(last_logits)
+        done = np.zeros((b,), bool)
+        for i in range(max_new_tokens):
+            out[:, i] = np.where(done, eos_id or 0, np.asarray(next_tok))
+            if eos_id is not None:
+                done |= out[:, i] == eos_id
+                if done.all():
+                    break
+            batch = {
+                "tokens": next_tok[:, None],
+                "pos": jnp.int32(s + i),
+                "caches": caches,
+            }
+            logits, caches = self._step(self.params, batch)
+            next_tok = self._sample(logits[:, 0])
+        return out
+
+    # ------------------------------------------------------------------ API
+    def serve(self, requests: List[Request]) -> List[List[int]]:
+        """Bucket by prompt length, run waves, return new tokens per req."""
+        order = sorted(range(len(requests)), key=lambda i: len(requests[i].prompt))
+        results: dict[int, List[int]] = {}
+        i = 0
+        while i < len(order):
+            j = i
+            plen = len(requests[order[i]].prompt)
+            while j < len(order) and len(requests[order[j]].prompt) == plen:
+                j += 1
+            wave_ids = order[i:j]
+            wave = np.stack(
+                [np.asarray(requests[k].prompt, np.int32) for k in wave_ids]
+            )
+            mnt = max(requests[k].max_new_tokens for k in wave_ids)
+            eos = requests[wave_ids[0]].eos_id
+            toks = self.generate_wave(wave, mnt, eos)
+            for row, k in enumerate(wave_ids):
+                t = toks[row, : requests[k].max_new_tokens].tolist()
+                if requests[k].eos_id is not None and requests[k].eos_id in t:
+                    t = t[: t.index(requests[k].eos_id)]
+                results[k] = t
+            i = j
+        return [results[k] for k in range(len(requests))]

@@ -1,0 +1,95 @@
+"""AdamW with global-norm clipping, decoupled weight decay, LR schedules and
+configurable moment dtype.
+
+``moment_dtype="bfloat16"`` halves the optimizer-state HBM footprint — the
+distributed-optimization lever that fits the 398B hybrid's train state on a
+single 256-chip v5e pod (see DESIGN.md §5 / EXPERIMENTS.md §Perf).  Moments
+are stored in the low precision but all update math runs in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    """Linear warmup then cosine decay to ``floor * peak_lr``."""
+
+    def schedule(step: Array) -> Array:
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac)
+        )
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    learning_rate: float | Callable = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+
+    def lr_at(self, step: Array) -> Array:
+        if callable(self.learning_rate):
+            return self.learning_rate(step)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+
+def adamw_init(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "m": jax.tree.map(zeros, params),
+        "v": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads, opt_state, params, cfg: AdamWConfig):
+    """-> (new_params, new_opt_state, metrics)."""
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip_norm / jnp.maximum(gnorm, 1e-12))
+    dt = jnp.dtype(cfg.moment_dtype)
+    lr = cfg.lr_at(count)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2 and cfg.weight_decay:  # decay matrices, not norms/bias
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        new_p = p.astype(jnp.float32) - lr * step
+        return new_p.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    is_triple = lambda x: isinstance(x, tuple) and len(x) == 3
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=is_triple)
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=is_triple)
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=is_triple)
+    new_state = {"m": new_m, "v": new_v, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,118 @@
+"""Train-step builder: value_and_grad + AdamW + microbatch gradient
+accumulation, with sharding-spec trees for pjit in/out."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt: Any
+    step: Array
+
+    @classmethod
+    def create(cls, params, opt_cfg: AdamWConfig):
+        return cls(
+            params=params,
+            opt=adamw_init(params, opt_cfg),
+            step=jnp.zeros((), jnp.int32),
+        )
+
+
+def _split_microbatches(batch, k: int):
+    """(B, ...) -> (k, B/k, ...) for every array leaf with a batch dim."""
+
+    def split(x):
+        if x.ndim == 0:
+            return jnp.broadcast_to(x, (k,))
+        b = x.shape[0]
+        assert b % k == 0, (b, k)
+        return x.reshape((k, b // k) + x.shape[1:])
+
+    return jax.tree.map(split, batch)
+
+
+def make_train_step(bundle, opt_cfg: AdamWConfig):
+    """-> train_step(state, batch) -> (state, metrics). jit-ready."""
+    micro = max(1, bundle.cfg.microbatches)
+
+    def loss_fn(params, batch):
+        loss, metrics = bundle.train_loss(params, batch)
+        return loss, metrics
+
+    def train_step(state: TrainState, batch):
+        if micro == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True
+            )(state.params, batch)
+        else:
+            mb = _split_microbatches(batch, micro)
+
+            def acc_body(carry, mb_i):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    state.params, mb_i
+                )
+                gsum = jax.tree.map(jnp.add, gsum, g)
+                return (gsum, lsum + l), None
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (gz, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / micro, gsum)
+            loss = lsum / micro
+            metrics = {"loss": loss, "aux_loss": jnp.zeros((), jnp.float32)}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            grads, state.opt, state.params, opt_cfg
+        )
+        metrics = dict(metrics, **opt_metrics, total_loss=loss)
+        return (
+            TrainState(params=new_params, opt=new_opt, step=state.step + 1),
+            metrics,
+        )
+
+    return train_step
+
+
+def make_train_state_specs(bundle):
+    """PartitionSpec tree for TrainState (opt moments inherit param specs)."""
+    pspecs = bundle.specs()
+    return TrainState(
+        params=pspecs,
+        opt={
+            "m": pspecs,
+            "v": pspecs,
+            "count": P(),
+        },
+        step=P(),
+    )
+
+
+def train_state_shapes(bundle, opt_cfg: AdamWConfig):
+    """ShapeDtypeStruct TrainState for the dry-run (no allocation)."""
+    pshapes = bundle.shapes()
+    mdt = jnp.dtype(opt_cfg.moment_dtype)
+    mom = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, mdt), pshapes)
+    return TrainState(
+        params=pshapes,
+        opt={
+            "m": mom,
+            "v": mom,
+            "count": jax.ShapeDtypeStruct((), jnp.int32),
+        },
+        step=jax.ShapeDtypeStruct((), jnp.int32),
+    )

@@ -1,0 +1,101 @@
+"""int8 error-feedback gradient compression under real data parallelism."""
+
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro.dist.meshes import make_mesh  # noqa: E402
+from repro.train.compression import (  # noqa: E402
+    GradCompression,
+    compressed_psum,
+)
+
+
+def main() -> None:
+    n = jax.device_count()
+    assert n == 8
+    mesh = make_mesh((n,), ("data",))
+    key = jax.random.PRNGKey(0)
+
+    # --- one-shot psum parity ------------------------------------------------
+    grads = jax.random.normal(key, (n, 512)) * 3.0
+
+    def body(g, r):
+        st = GradCompression(residual={"g": r.reshape(512)})
+        out, new = compressed_psum({"g": g.reshape(512)}, ("data",), st, n)
+        return out["g"], new.residual["g"][None]
+
+    fn = jax.jit(
+        jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P("data", None), P("data", None)),
+            out_specs=(P(), P("data", None)),
+        )
+    )
+    out, resid = fn(grads, jnp.zeros_like(grads))
+    ref = np.asarray(grads.mean(axis=0))
+    tol = float(np.abs(np.asarray(grads)).max()) / 127 + 1e-6
+    assert np.abs(np.asarray(out) - ref).max() <= tol
+    print("compressed psum parity: OK")
+
+    # --- convergence: SGD on a least-squares problem, compressed vs exact ----
+    w_true = jax.random.normal(jax.random.fold_in(key, 1), (64,))
+    X = jax.random.normal(jax.random.fold_in(key, 2), (n, 32, 64))
+    yv = jnp.einsum("dbf,f->db", X, w_true)
+
+    def grad_local(w, Xl, yl):
+        r = Xl @ w - yl
+        return Xl.T @ r / Xl.shape[0]
+
+    def run(compressed: bool, steps=150, lr=0.1):
+        def body(Xl, yl):
+            Xl, yl = Xl[0], yl[0]
+            w = jnp.zeros((64,))
+            # the error-feedback residual is per-shard state (VMA: varying)
+            r = jax.lax.pvary(jnp.zeros((64,)), ("data",))
+
+            def step(carry, _):
+                w, r = carry
+                g = grad_local(w, Xl, yl)
+                if compressed:
+                    st = GradCompression(residual={"g": r})
+                    out, new = compressed_psum(
+                        {"g": g}, ("data",), st, n
+                    )
+                    g, r = out["g"], new.residual["g"]
+                else:
+                    g = jax.lax.pmean(g, "data")
+                return (w - lr * g, r), None
+
+            (w, _), _ = jax.lax.scan(step, (w, r), None, length=steps)
+            return w
+
+        fn = jax.jit(
+            jax.shard_map(
+                body, mesh=mesh,
+                in_specs=(P("data", None, None), P("data", None)),
+                out_specs=P(),
+            )
+        )
+        return np.asarray(fn(X, yv))
+
+    w_exact = run(False)
+    w_comp = run(True)
+    err_exact = np.linalg.norm(w_exact - np.asarray(w_true))
+    err_comp = np.linalg.norm(w_comp - np.asarray(w_true))
+    print(f"exact err {err_exact:.4f}  compressed err {err_comp:.4f}")
+    # error feedback keeps compressed SGD converging to the same solution
+    assert err_comp <= err_exact + 0.05
+    print("ALL-MD-COMPRESSION-OK")
+
+
+if __name__ == "__main__":
+    main()

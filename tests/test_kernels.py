@@ -1,0 +1,223 @@
+"""Pallas kernel tests: shape/dtype sweeps vs the pure-jnp oracles.
+
+All kernels run in ``interpret=True`` mode on CPU (the kernel body executes
+in Python), which validates the BlockSpec tiling, accumulation-across-grid
+logic and padding behaviour against ``repro.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.contingency import contingency_tables_pallas
+from repro.kernels.mi_score import mi_scores_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pearson import pearson_corr_pallas
+
+
+class TestContingencyKernel:
+    @pytest.mark.parametrize(
+        "m,f,v,c",
+        [
+            (16, 4, 2, 2),
+            (100, 7, 3, 2),     # non-divisible M and F
+            (512, 8, 4, 3),
+            (1030, 33, 5, 4),   # padding on both axes
+            (64, 1, 2, 2),      # single feature
+        ],
+    )
+    def test_matches_oracle(self, m, f, v, c):
+        rng = np.random.default_rng(hash((m, f, v, c)) % 2**31)
+        X = jnp.asarray(rng.integers(0, v, (m, f)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, c, m), jnp.int32)
+        got = contingency_tables_pallas(X, y, v, c, interpret=True)
+        want = ref.contingency_tables(X, y, v, c)
+        np.testing.assert_allclose(got, want, atol=0)
+
+    @pytest.mark.parametrize("tile_m,tile_f", [(8, 2), (32, 8), (512, 64)])
+    def test_tile_sweep(self, tile_m, tile_f):
+        rng = np.random.default_rng(0)
+        X = jnp.asarray(rng.integers(0, 3, (130, 21)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 2, 130), jnp.int32)
+        got = contingency_tables_pallas(
+            X, y, 3, 2, tile_m=tile_m, tile_f=tile_f, interpret=True
+        )
+        want = ref.contingency_tables(X, y, 3, 2)
+        np.testing.assert_allclose(got, want, atol=0)
+
+    def test_out_of_range_padding_rows(self):
+        X = jnp.asarray([[0], [1], [2**31 - 1]], jnp.int32)
+        y = jnp.asarray([0, 1, 2**31 - 1], jnp.int32)
+        got = contingency_tables_pallas(X, y, 2, 2, interpret=True)
+        np.testing.assert_allclose(got[0], np.array([[1, 0], [0, 1]]))
+
+    @pytest.mark.parametrize("dtype", [jnp.int8, jnp.int16, jnp.int32])
+    def test_dtypes(self, dtype):
+        rng = np.random.default_rng(1)
+        X = jnp.asarray(rng.integers(0, 2, (40, 5)), dtype)
+        y = jnp.asarray(rng.integers(0, 2, 40), dtype)
+        got = contingency_tables_pallas(X, y, 2, 2, interpret=True)
+        want = ref.contingency_tables(X.astype(jnp.int32), y.astype(jnp.int32), 2, 2)
+        np.testing.assert_allclose(got, want, atol=0)
+
+
+class TestPearsonKernel:
+    @pytest.mark.parametrize(
+        "f,t,m",
+        [
+            (4, 1, 64),
+            (7, 3, 100),     # non-divisible everywhere
+            (128, 128, 512),
+            (130, 5, 1030),  # padding on every axis
+        ],
+    )
+    def test_matches_oracle(self, f, t, m):
+        rng = np.random.default_rng(hash((f, t, m)) % 2**31)
+        X = jnp.asarray(rng.normal(size=(f, m)), jnp.float32)
+        Y = jnp.asarray(rng.normal(size=(t, m)), jnp.float32)
+        got = pearson_corr_pallas(X, Y, interpret=True)
+        want = ref.pearson_corr(X, Y)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    @pytest.mark.parametrize("tile", [(8, 8, 16), (64, 32, 128)])
+    def test_tile_sweep(self, tile):
+        tf, tt, tm = tile
+        rng = np.random.default_rng(2)
+        X = jnp.asarray(rng.normal(size=(33, 200)), jnp.float32)
+        Y = jnp.asarray(rng.normal(size=(9, 200)), jnp.float32)
+        got = pearson_corr_pallas(
+            X, Y, tile_f=tf, tile_t=tt, tile_m=tm, interpret=True
+        )
+        want = ref.pearson_corr(X, Y)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-5)
+
+    def test_bf16_input(self):
+        rng = np.random.default_rng(3)
+        X = jnp.asarray(rng.normal(size=(8, 128)), jnp.bfloat16)
+        Y = jnp.asarray(rng.normal(size=(2, 128)), jnp.bfloat16)
+        got = pearson_corr_pallas(X, Y, interpret=True)
+        want = ref.pearson_corr(X.astype(jnp.float32), Y.astype(jnp.float32))
+        np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+    def test_self_correlation_diagonal(self):
+        rng = np.random.default_rng(4)
+        X = jnp.asarray(rng.normal(size=(6, 300)), jnp.float32)
+        got = pearson_corr_pallas(X, X, interpret=True)
+        np.testing.assert_allclose(np.diag(got), np.ones(6), rtol=1e-4)
+
+
+class TestMIScoreKernel:
+    @pytest.mark.parametrize(
+        "f,v,c", [(1, 2, 2), (10, 3, 2), (300, 4, 4), (257, 5, 3)]
+    )
+    def test_matches_oracle(self, f, v, c):
+        rng = np.random.default_rng(hash((f, v, c)) % 2**31)
+        counts = jnp.asarray(rng.integers(0, 50, (f, v, c)), jnp.float32)
+        got = mi_scores_pallas(counts, interpret=True)
+        want = ref.mi_scores(counts)
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_zero_rows(self):
+        counts = jnp.zeros((4, 3, 3), jnp.float32)
+        got = mi_scores_pallas(counts, interpret=True)
+        np.testing.assert_allclose(got, np.zeros(4), atol=1e-6)
+
+
+class TestOpsDispatch:
+    def test_ops_cpu_uses_oracle(self):
+        rng = np.random.default_rng(5)
+        X = jnp.asarray(rng.integers(0, 2, (50, 6)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 2, 50), jnp.int32)
+        auto = ops.contingency_tables(X, y, 2, 2)
+        oracle = ref.contingency_tables(X, y, 2, 2)
+        np.testing.assert_allclose(auto, oracle)
+
+    def test_ops_forced_pallas_interpret(self):
+        rng = np.random.default_rng(6)
+        X = jnp.asarray(rng.integers(0, 3, (64, 8)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 2, 64), jnp.int32)
+        forced = ops.contingency_tables(X, y, 3, 2, use_pallas=True)
+        oracle = ref.contingency_tables(X, y, 3, 2)
+        np.testing.assert_allclose(forced, oracle)
+
+    def test_mi_tables_end_to_end(self):
+        rng = np.random.default_rng(7)
+        X = jnp.asarray(rng.integers(0, 2, (200, 10)), jnp.int32)
+        y = jnp.asarray(rng.integers(0, 2, 200), jnp.int32)
+        got = ops.mi_tables(X, y, 2, 2, use_pallas=True)
+        from repro.core import mi_from_counts
+
+        want = mi_from_counts(ref.contingency_tables(X, y, 2, 2))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize(
+        "b,s,h,kv,d,causal",
+        [
+            (2, 256, 8, 4, 64, True),
+            (1, 128, 4, 4, 32, False),   # MHA (kv == h)
+            (2, 512, 8, 2, 64, True),    # GQA group 4
+            (1, 256, 8, 1, 128, True),   # MQA
+        ],
+    )
+    def test_matches_oracle(self, b, s, h, kv, d, causal):
+        key = jax.random.PRNGKey(0)
+        q = jax.random.normal(key, (b, s, h, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, s, kv, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, s, kv, d))
+        out = flash_attention_pallas(
+            q, k, v, causal=causal, block_q=128, block_kv=128, interpret=True
+        )
+        want = ref.flash_attention(q, k, v, causal=causal)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+
+    @pytest.mark.parametrize("bq,bkv", [(64, 128), (128, 64), (256, 256)])
+    def test_block_sweep(self, bq, bkv):
+        key = jax.random.PRNGKey(3)
+        q = jax.random.normal(key, (1, 256, 4, 64))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 64))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 64))
+        out = flash_attention_pallas(
+            q, k, v, causal=True, block_q=bq, block_kv=bkv, interpret=True
+        )
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=2e-5, atol=2e-5
+        )
+
+    def test_bf16(self):
+        key = jax.random.PRNGKey(4)
+        q = jax.random.normal(key, (2, 128, 4, 64), jnp.bfloat16)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (2, 128, 4, 64),
+                              jnp.bfloat16)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (2, 128, 4, 64),
+                              jnp.bfloat16)
+        out = flash_attention_pallas(
+            q, k, v, causal=True, block_q=64, block_kv=64, interpret=True
+        )
+        want = ref.flash_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(want, np.float32),
+            rtol=3e-2, atol=3e-2,
+        )
+
+    def test_matches_model_blockwise_path(self):
+        from repro.models.attention import blockwise_attention
+
+        key = jax.random.PRNGKey(5)
+        q = jax.random.normal(key, (1, 512, 8, 64))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (1, 512, 4, 64))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (1, 512, 4, 64))
+        out = flash_attention_pallas(
+            q, k, v, causal=True, block_q=128, block_kv=128, interpret=True
+        )
+        want = blockwise_attention(q, k, v, causal=True, block_q=128,
+                                   block_kv=128)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=3e-5, atol=3e-5
+        )

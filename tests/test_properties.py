@@ -1,0 +1,150 @@
+"""Property-based tests (hypothesis) for mRMR system invariants."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st, assume, HealthCheck
+
+from repro.core import MIScore, mrmr_reference, mi_from_counts
+
+_SETTINGS = dict(
+    max_examples=10,
+    deadline=None,
+    suppress_health_check=[HealthCheck.too_slow],
+)
+
+
+def _dataset(draw, max_n=10, max_m=96, num_values=2):
+    n = draw(st.integers(4, max_n))
+    m = draw(st.integers(16, max_m))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    X = rng.integers(0, num_values, (n, m)).astype(np.int32)  # feature-major
+    y = rng.integers(0, 2, m).astype(np.int32)
+    return X, y
+
+
+@st.composite
+def datasets(draw):
+    return _dataset(draw)
+
+
+@st.composite
+def datasets_v3(draw):
+    return _dataset(draw, num_values=3)
+
+
+@given(datasets())
+@settings(**_SETTINGS)
+def test_selection_unique_and_in_range(data):
+    X, y = data
+    n = X.shape[0]
+    L = min(4, n)
+    res = mrmr_reference(jnp.asarray(X), jnp.asarray(y), L, MIScore(2, 2))
+    sel = np.asarray(res.selected)
+    assert len(np.unique(sel)) == L
+    assert sel.min() >= 0 and sel.max() < n
+
+
+@given(datasets())
+@settings(**_SETTINGS)
+def test_incremental_equals_faithful(data):
+    X, y = data
+    L = min(5, X.shape[0])
+    a = mrmr_reference(jnp.asarray(X), jnp.asarray(y), L, MIScore(2, 2),
+                       incremental=True)
+    b = mrmr_reference(jnp.asarray(X), jnp.asarray(y), L, MIScore(2, 2),
+                       incremental=False)
+    np.testing.assert_array_equal(np.asarray(a.selected), np.asarray(b.selected))
+    np.testing.assert_allclose(a.gains, b.gains, rtol=1e-4, atol=1e-5)
+
+
+def _np_mrmr_with_gaps(X, y, L, v=2):
+    """Numpy mRMR returning (selection, min top-2 score gap across steps)."""
+    from tests.test_scores import np_mi, np_pair_counts
+
+    n = X.shape[0]
+    rel = np.array([np_mi(np_pair_counts(X[k], y, v, 2)) for k in range(n)])
+    pair = np.array(
+        [[np_mi(np_pair_counts(X[k], X[j], v, v)) for j in range(n)]
+         for k in range(n)]
+    )
+    selected, min_gap = [], np.inf
+    for l in range(L):
+        red = (pair[:, selected].mean(axis=1) if selected else np.zeros(n))
+        g = rel - red
+        g[selected] = -np.inf
+        order = np.argsort(g)[::-1]
+        gap = g[order[0]] - g[order[1]] if n - len(selected) > 1 else np.inf
+        min_gap = min(min_gap, gap)
+        selected.append(int(order[0]))
+    return selected, min_gap
+
+
+@given(datasets(), st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_selection_permutation_equivariant(data, perm_seed):
+    """With no score ties at any greedy step, permuting feature order maps
+    the selection exactly through the permutation (ties legitimately fork
+    the greedy trajectory, so tied examples are discarded)."""
+    X, y = data
+    n = X.shape[0]
+    L = min(4, n)
+    sel_np, gap = _np_mrmr_with_gaps(X, y, L)
+    assume(gap > 1e-4)
+    score = MIScore(2, 2)
+    res = mrmr_reference(jnp.asarray(X), jnp.asarray(y), L, score)
+    np.testing.assert_array_equal(np.asarray(res.selected), sel_np)
+    perm = np.random.default_rng(perm_seed).permutation(n)
+    res_p = mrmr_reference(jnp.asarray(X[perm]), jnp.asarray(y), L, score)
+    np.testing.assert_array_equal(
+        perm[np.asarray(res_p.selected)], np.asarray(res.selected)
+    )
+
+
+@given(datasets_v3(), st.integers(0, 2**31 - 1))
+@settings(**_SETTINGS)
+def test_selection_invariant_to_category_relabeling(data, seed):
+    """MI is invariant under per-feature category permutation, so (absent
+    score ties, which float32 row-order effects can flip) the whole greedy
+    trajectory must be identical."""
+    X, y = data
+    n = X.shape[0]
+    L = min(4, n)
+    _, gap = _np_mrmr_with_gaps(X, y, L, v=3)
+    assume(gap > 1e-4)
+    score = MIScore(3, 2)
+    relabel = np.random.default_rng(seed).permutation(3)
+    X2 = relabel[X]
+    a = mrmr_reference(jnp.asarray(X), jnp.asarray(y), L, score)
+    b = mrmr_reference(jnp.asarray(X2), jnp.asarray(y), L, score)
+    np.testing.assert_array_equal(np.asarray(a.selected), np.asarray(b.selected))
+    np.testing.assert_allclose(a.gains, b.gains, rtol=1e-4, atol=1e-5)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 6), st.integers(2, 6))
+@settings(**_SETTINGS)
+def test_mi_nonnegative_symmetric(seed, v, c):
+    rng = np.random.default_rng(seed)
+    counts = rng.integers(0, 40, (v, c)).astype(np.float32)
+    assume(counts.sum() > 0)
+    a = float(mi_from_counts(jnp.asarray(counts)))
+    b = float(mi_from_counts(jnp.asarray(counts.T)))
+    assert a >= -1e-6
+    assert abs(a - b) < 1e-5
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(16, 200))
+@settings(**_SETTINGS)
+def test_mi_data_processing(seed, m):
+    """I(x; y) <= H(x): MI bounded by the entropy of either variable."""
+    from repro.core import entropy_from_counts
+    from repro.core.contingency import pair_counts
+
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 4, m))
+    y = jnp.asarray(rng.integers(0, 3, m))
+    counts = pair_counts(x, y, 4, 3)
+    mi = float(mi_from_counts(counts))
+    hx = float(entropy_from_counts(counts.sum(axis=1)))
+    hy = float(entropy_from_counts(counts.sum(axis=0)))
+    assert mi <= min(hx, hy) + 1e-5

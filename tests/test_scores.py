@@ -1,0 +1,154 @@
+"""Unit tests for contingency math and score functions."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import contingency, scores
+
+
+def np_pair_counts(x, y, vx, vy):
+    out = np.zeros((vx, vy))
+    for xi, yi in zip(np.asarray(x), np.asarray(y)):
+        if 0 <= xi < vx and 0 <= yi < vy:
+            out[xi, yi] += 1
+    return out
+
+
+def np_mi(counts):
+    counts = np.asarray(counts, dtype=np.float64)
+    total = counts.sum()
+    p = counts / total
+    px = p.sum(axis=1, keepdims=True)
+    py = p.sum(axis=0, keepdims=True)
+    with np.errstate(divide="ignore", invalid="ignore"):
+        terms = p * np.log(p / (px * py))
+    return np.nansum(np.where(p > 0, terms, 0.0))
+
+
+class TestContingency:
+    def test_pair_counts_matches_numpy(self):
+        rng = np.random.default_rng(0)
+        x = rng.integers(0, 4, 257)
+        y = rng.integers(0, 3, 257)
+        got = contingency.pair_counts(jnp.asarray(x), jnp.asarray(y), 4, 3)
+        np.testing.assert_allclose(got, np_pair_counts(x, y, 4, 3))
+
+    def test_paper_table_iv(self):
+        # Paper Table IV: pair (x1=2 -> one-hot col for value 2, c=0) of the
+        # first entry in Table III, categories dv={-2,0,2} -> {0,1,2}.
+        x = jnp.asarray([2])  # value "2" encoded as category index 2
+        c = jnp.asarray([0])
+        table = contingency.pair_counts(x, c, 3, 2)
+        expected = np.zeros((3, 2))
+        expected[2, 0] = 1
+        np.testing.assert_allclose(table, expected)
+
+    def test_paper_table_v_combiner(self):
+        # Paper Table V: element-wise sum over the four entries of Table III
+        # for (x1, c). x1 = (2, 0, 0, -2) -> encoded (2, 1, 1, 0); c=(0,0,0,1).
+        x = jnp.asarray([2, 1, 1, 0])
+        c = jnp.asarray([0, 0, 0, 1])
+        table = contingency.pair_counts(x, c, 3, 2)
+        expected = np.array([[0, 1], [2, 0], [1, 0]])
+        np.testing.assert_allclose(table, expected.astype(float))
+
+    @pytest.mark.parametrize("block", [1, 3, 64, 128])
+    def test_batched_counts_blocks(self, block):
+        rng = np.random.default_rng(1)
+        X = rng.integers(0, 5, (100, 17))
+        y = rng.integers(0, 2, 100)
+        got = contingency.batched_counts(
+            jnp.asarray(X), jnp.asarray(y), 5, 2, block=block
+        )
+        for f in range(17):
+            np.testing.assert_allclose(got[f], np_pair_counts(X[:, f], y, 5, 2))
+
+    def test_out_of_range_rows_ignored(self):
+        # Padded rows carry out-of-range values -> zero contribution.
+        X = jnp.asarray([[0], [1], [2**31 - 1]])
+        y = jnp.asarray([0, 1, 2**31 - 1])
+        got = contingency.batched_counts(X, y, 2, 2)
+        np.testing.assert_allclose(got[0], np.array([[1, 0], [0, 1]]))
+
+
+class TestMI:
+    def test_known_value_independent(self):
+        counts = jnp.full((4, 4), 25.0)
+        assert abs(float(scores.mi_from_counts(counts))) < 1e-6
+
+    def test_known_value_identical(self):
+        # x == y uniform over k values: MI = log(k).
+        counts = jnp.eye(5) * 20
+        np.testing.assert_allclose(
+            float(scores.mi_from_counts(counts)), np.log(5), rtol=1e-5
+        )
+
+    def test_matches_numpy_random(self):
+        rng = np.random.default_rng(2)
+        counts = rng.integers(0, 50, (7, 3, 4)).astype(float)
+        got = scores.mi_from_counts(jnp.asarray(counts))
+        want = [np_mi(counts[i]) for i in range(7)]
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_symmetry(self):
+        rng = np.random.default_rng(3)
+        counts = rng.integers(0, 50, (5, 5)).astype(float)
+        a = float(scores.mi_from_counts(jnp.asarray(counts)))
+        b = float(scores.mi_from_counts(jnp.asarray(counts.T)))
+        assert abs(a - b) < 1e-6
+
+    def test_entropy(self):
+        counts = jnp.asarray([10.0, 10.0, 10.0, 10.0])
+        np.testing.assert_allclose(
+            float(scores.entropy_from_counts(counts)), np.log(4), rtol=1e-6
+        )
+
+
+class TestPearson:
+    def test_pearson_matches_numpy(self):
+        rng = np.random.default_rng(4)
+        X = rng.normal(size=(6, 200)).astype(np.float32)
+        y = rng.normal(size=200).astype(np.float32)
+        got = scores.pearson_rows(jnp.asarray(X), jnp.asarray(y))
+        want = [np.corrcoef(X[i], y)[0, 1] for i in range(6)]
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_cor2mi_listing8(self):
+        # Listing 8: cor2mi(v) = -0.5*log(1 - v^2)
+        v = jnp.asarray([0.0, 0.5, 0.9])
+        got = scores.cor2mi(v)
+        want = -0.5 * np.log(1.0 - np.asarray(v) ** 2)
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    def test_constant_row_zero_corr(self):
+        X = jnp.ones((1, 50))
+        y = jnp.asarray(np.random.default_rng(5).normal(size=50), jnp.float32)
+        got = scores.pearson_rows(X, y)
+        np.testing.assert_allclose(got, [0.0], atol=1e-6)
+
+
+class TestScoreObjects:
+    def test_mi_score_relevance(self):
+        rng = np.random.default_rng(6)
+        X = rng.integers(0, 3, (9, 300))  # feature-major
+        y = rng.integers(0, 2, 300)
+        s = scores.MIScore(num_values=3, num_classes=2)
+        rel = s.relevance(jnp.asarray(X), jnp.asarray(y))
+        want = [np_mi(np_pair_counts(X[i], y, 3, 2)) for i in range(9)]
+        np.testing.assert_allclose(rel, want, rtol=1e-4, atol=1e-6)
+
+    def test_custom_score_equals_builtin_mrmr(self):
+        rng = np.random.default_rng(7)
+        X = rng.integers(0, 2, (8, 120))
+        y = rng.integers(0, 2, 120)
+        s = scores.MIScore(num_values=2, num_classes=2)
+        custom = scores.mrmr_custom_score(s)
+        sel = jnp.asarray(X[:3], jnp.int32)
+        g_custom = custom.full_score(
+            jnp.asarray(X), jnp.asarray(y), sel, jnp.int32(3)
+        )
+        rel = s.relevance(jnp.asarray(X), jnp.asarray(y))
+        red = sum(s.redundancy(jnp.asarray(X), sel[j]) for j in range(3)) / 3.0
+        np.testing.assert_allclose(g_custom, rel - red, rtol=1e-5, atol=1e-6)

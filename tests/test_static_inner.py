@@ -1,0 +1,32 @@
+"""static_inner (dry-run cost mode) must not change mRMR semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.mrmr import make_conventional_fn
+from repro.core.scores import MIScore
+from repro.data.synthetic import corral_dataset
+
+
+def test_static_inner_matches_dynamic():
+    X, y = corral_dataset(2000, 24, seed=3)
+    X, y = jnp.asarray(X, jnp.int32), jnp.asarray(y)
+    score = MIScore(num_values=2, num_classes=2)
+    dyn = make_conventional_fn(8, score, incremental=False)(X, y)
+    sta = make_conventional_fn(8, score, incremental=False, static_inner=True)(X, y)
+    np.testing.assert_array_equal(np.asarray(dyn[0]), np.asarray(sta[0]))
+    np.testing.assert_allclose(
+        np.asarray(dyn[1]), np.asarray(sta[1]), rtol=1e-5, atol=1e-6
+    )
+
+
+def test_bf16_onehot_counts_exact():
+    X, y = corral_dataset(4096, 16, seed=1)
+    X, y = jnp.asarray(X, jnp.int32), jnp.asarray(y)
+    score = MIScore(num_values=2, num_classes=2)
+    bf = make_conventional_fn(6, score, onehot_dtype=jnp.bfloat16)(X, y)
+    f32 = make_conventional_fn(6, score, onehot_dtype=jnp.float32)(X, y)
+    np.testing.assert_array_equal(np.asarray(bf[0]), np.asarray(f32[0]))
+    np.testing.assert_allclose(
+        np.asarray(bf[1]), np.asarray(f32[1]), rtol=1e-6, atol=1e-7
+    )
