@@ -27,8 +27,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.analysis.hlo_analysis import analyze_hlo
 from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
-from repro.core.mrmr import make_conventional_fn
 from repro.core.scores import MIScore
+from repro.core.selector import SelectionPlan, build_engine_fn
 from repro.launch.mesh import make_production_mesh
 
 OUT = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
@@ -43,9 +43,9 @@ def model_flops_mrmr(rows: int, cols: int, select: int, v: int, c: int,
 
 VARIANTS = {
     # name -> (incremental, onehot_dtype, static_inner)
-    "paper": (False, jnp.float32, True),
-    "incremental": (True, jnp.float32, False),
-    "bf16onehot": (True, jnp.bfloat16, False),
+    "paper": (False, "float32", True),
+    "incremental": (True, "float32", False),
+    "bf16onehot": (True, "bfloat16", False),
 }
 
 
@@ -55,13 +55,17 @@ def run_variant(name: str, mesh_kind: str, rows: int, cols: int, select: int,
     obs_axes = tuple(mesh.axis_names)  # rows sharded over every axis
     score = MIScore(num_values=2, num_classes=2)
     inc, oh_dt, static_inner = VARIANTS.get(
-        name, (incremental, jnp.bfloat16, False)
+        name, (incremental, "bfloat16", False)
     )
-    fn = make_conventional_fn(
-        select, score, mesh=mesh, obs_axes=obs_axes,
-        incremental=inc, block=block, onehot_dtype=oh_dt,
-        static_inner=static_inner,
+    # The exact job MRMRSelector would run for this plan, via the engine
+    # registry — benchmarks lower/compile the same HLO as production fits.
+    plan = SelectionPlan(
+        encoding="conventional", obs_axes=obs_axes,
+        mesh_shape=tuple(mesh.shape[a] for a in obs_axes),
+        block=block, incremental=inc, score=score,
+        onehot_dtype=oh_dt, static_inner=static_inner,
     )
+    fn = build_engine_fn(plan, mesh, select, cols)
     incremental = inc
     pad_rows = -(-rows // mesh.size) * mesh.size
     X = jax.ShapeDtypeStruct((pad_rows, cols), jnp.int8)

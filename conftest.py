@@ -1,0 +1,11 @@
+import sys
+import pathlib
+
+# Make ``repro`` importable without an install step (mirrors PYTHONPATH=src).
+sys.path.insert(0, str(pathlib.Path(__file__).parent / "src"))
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers", "slow: multi-device semantics suites run as subprocesses"
+    )

@@ -4,6 +4,9 @@ The paper's alternative encoding exposes ``getResult(variableArray,
 classArray, selectedVariablesArray) -> Double``.  Our JAX equivalent is a
 ``CustomScore`` whose ``get_result(v, cls, selected, n_selected)`` is traced
 and vectorised over the feature shard — the same contract, but compiled.
+Custom scores go through the same ``MRMRSelector`` front door as everything
+else: the planner routes them to the feature-sharded (map-only) encoding
+automatically, and the selector owns the layout transposition.
 
 Two scores are shown:
   1. the paper's own example — Pearson-correlation MI approximation
@@ -16,8 +19,8 @@ Two scores are shown:
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mrmr import mrmr_alternative
-from repro.core.scores import CustomScore, cor2mi, PearsonMIScore
+from repro import CustomScore, MRMRSelector, PearsonMIScore
+from repro.core.scores import cor2mi
 from repro.data.synthetic import continuous_wide_dataset
 
 
@@ -63,17 +66,17 @@ def anova_f_get_result(v, cls, selected, n_selected):
 
 def main():
     X, y = continuous_wide_dataset(2_000, 4_096, seed=0)
-    X_rows = jnp.asarray(np.asarray(X).T)  # alternative encoding: (N, M)
-    yf = y.astype(jnp.float32)
+    X = jnp.asarray(X)  # conventional orientation (obs × features)
 
     for name, score in [
         ("built-in PearsonMI", PearsonMIScore()),
         ("Listing 8 (custom)", CustomScore(get_result=listing8_get_result)),
         ("ANOVA-F (custom)", CustomScore(get_result=anova_f_get_result)),
     ]:
-        res = mrmr_alternative(X_rows, yf, 8, score)
-        sel = list(np.asarray(res.selected))
-        print(f"{name:>20s}: selected {sel}")
+        fs = MRMRSelector(num_select=8, score=score).fit(X, y)
+        sel = list(fs.selected_)
+        print(f"{name:>20s}: selected {sel} "
+              f"(encoding={fs.plan_.encoding})")
         print(f"{'':>20s}  signal cols (0-7) recovered: "
               f"{len(set(sel) & set(range(8)))}/8, "
               f"redundant shadow col 8 picked: {8 in sel}")

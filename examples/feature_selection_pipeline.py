@@ -13,8 +13,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.selection import FeatureSelector
-from repro.core.scores import PearsonMIScore
+from repro import MRMRSelector, PearsonMIScore
 from repro.data.synthetic import continuous_wide_dataset
 from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
 
@@ -52,9 +51,10 @@ def main():
     ntr = int(0.8 * N_OBS)
     Xtr, Xte, ytr, yte = X[:ntr], X[ntr:], y[:ntr], y[ntr:]
 
-    # feature selection sees only the training split (no leakage)
-    fs = FeatureSelector(num_select=K, layout="alternative",
-                         score=PearsonMIScore()).fit(Xtr, ytr)
+    # feature selection sees only the training split (no leakage);
+    # Pearson score -> the planner picks the feature-sharded encoding.
+    fs = MRMRSelector(num_select=K, score=PearsonMIScore()).fit(Xtr, ytr)
+    print(f"planned encoding: {fs.plan_.encoding}")
     sel = np.asarray(fs.selected_)
     rng = np.random.default_rng(0)
     rand = rng.choice(N_FEAT, size=K, replace=False)

@@ -4,24 +4,28 @@
 
 Generates the paper's CorrAL-style dataset (Eq. 3: the class is a boolean
 function of features 0..7, feature 8 is partially correlated, the rest is
-noise), then runs mRMR in both of the paper's encodings and checks they
-recover the relevant features.
+noise), then runs mRMR through the ``MRMRSelector`` front door: once
+auto-planned (the paper's §III aspect-ratio rule picks the encoding) and
+once per explicit encoding, checking they recover the relevant features.
 """
 
 import jax
 import numpy as np
 
-from repro.core.selection import FeatureSelector
+from repro import MRMRSelector
 from repro.data.synthetic import corral_dataset
 
 X, y = corral_dataset(20_000, 64, seed=0)
 print(f"dataset: X{X.shape} y{y.shape}  devices: {jax.device_count()}")
 
-for layout in ("conventional", "alternative"):
-    fs = FeatureSelector(num_select=10, layout=layout).fit(X, y)
+fs = MRMRSelector(num_select=10).fit(X, y)
+print(f"{'auto':>12s}: planned encoding = {fs.plan_.encoding!r}")
+
+for encoding in ("conventional", "alternative"):
+    fs = MRMRSelector(num_select=10, encoding=encoding).fit(X, y)
     sel = list(fs.selected_)
     hits = sorted(set(sel) & set(range(9)))
-    print(f"{layout:>12s}: selected {sel}")
+    print(f"{encoding:>12s}: selected {sel}")
     print(f"{'':>12s}  relevant recovered: {hits} ({len(hits)}/9)")
 
 Xt = fs.transform(np.asarray(X))

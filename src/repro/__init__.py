@@ -1,16 +1,82 @@
 """repro — distributed mRMR feature selection (Reggiani et al., 2017) in JAX.
 
 A production-grade JAX framework reproducing and extending
-"Feature selection in high-dimensional dataset using MapReduce":
+"Feature selection in high-dimensional dataset using MapReduce".
 
-* ``repro.core``    — the paper's contribution: distributed mRMR with both
-  data encodings (conventional = observation-sharded, alternative =
-  feature-sharded), pluggable feature-score functions, and an incremental
-  redundancy optimisation.
+Quickstart
+----------
+
+One front door, ``MRMRSelector`` — inputs are always (observations ×
+features); the distribution strategy is planned from the dataset's aspect
+ratio and the available devices (paper §III: tall/narrow -> observation
+sharding, wide/short -> feature sharding, both-large -> 2-D grid)::
+
+    from repro import MRMRSelector
+    from repro.data.synthetic import corral_dataset
+
+    X, y = corral_dataset(20_000, 64, seed=0)
+    sel = MRMRSelector(num_select=10).fit(X, y)
+    print(sel.selected_)        # feature ids, in selection order
+    print(sel.plan_)            # the resolved SelectionPlan
+    X_small = sel.transform(X)  # selected columns, selection order
+
+Force an encoding or a mesh instead of auto-planning::
+
+    from repro.dist import make_mesh
+
+    mesh = make_mesh((4, 2), ("data", "model"))
+    sel = MRMRSelector(num_select=10, encoding="grid", mesh=mesh).fit(X, y)
+
+Custom scores (paper §IV.D) run through the same front door::
+
+    from repro import CustomScore
+    sel = MRMRSelector(5, score=CustomScore(get_result=my_score)).fit(X, y)
+
+Layers
+------
+
+* ``repro.core``    — the paper's contribution: ``MRMRSelector`` /
+  ``SelectionPlan`` / ``plan_selection`` on top of the four drivers
+  (reference, conventional, alternative, grid) in an open engine registry;
+  pluggable feature-score functions; incremental redundancy optimisation.
+* ``repro.dist``    — the distribution substrate: named meshes, logical
+  sharding rules, pipeline parallelism, jax version compat.
 * ``repro.kernels`` — Pallas TPU kernels for the scoring hot spots.
-* ``repro.models``  — architecture zoo (dense / MoE / SSM / hybrid / enc-dec
-  / VLM backbones) used as workloads for the distribution substrate.
-* ``repro.launch``  — production mesh, multi-pod dry-run, train/serve CLIs.
+* ``repro.models``  — architecture zoo (dense / MoE / SSM / hybrid /
+  enc-dec / VLM backbones) used as workloads for the substrate.
+* ``repro.launch``  — production mesh, multi-pod dry-run, CLIs
+  (``python -m repro.launch.select`` runs selection end-to-end).
 """
 
-__version__ = "1.0.0"
+from repro.core import (  # noqa: F401
+    CustomScore,
+    FeatureSelector,
+    MIScore,
+    MRMRResult,
+    MRMRSelector,
+    PearsonMIScore,
+    ScoreFn,
+    SelectionPlan,
+    available_encodings,
+    mrmr_select,
+    plan_selection,
+    register_engine,
+)
+
+__version__ = "1.1.0"
+
+__all__ = [
+    "CustomScore",
+    "FeatureSelector",
+    "MIScore",
+    "MRMRResult",
+    "MRMRSelector",
+    "PearsonMIScore",
+    "ScoreFn",
+    "SelectionPlan",
+    "available_encodings",
+    "mrmr_select",
+    "plan_selection",
+    "register_engine",
+    "__version__",
+]

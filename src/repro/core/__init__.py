@@ -1,6 +1,11 @@
 # The paper's primary contribution: distributed mRMR feature selection.
+# The front door is MRMRSelector (repro.core.selector); the driver
+# functions remain public for benchmarks and direct engine access.
 from repro.core.mrmr import (  # noqa: F401
     MRMRResult,
+    make_alternative_fn,
+    make_conventional_fn,
+    make_grid_fn,
     mrmr_alternative,
     mrmr_conventional,
     mrmr_grid,
@@ -16,5 +21,14 @@ from repro.core.scores import (  # noqa: F401
     mi_from_counts,
     mrmr_custom_score,
     pearson_rows,
+)
+from repro.core.selector import (  # noqa: F401
+    MRMRSelector,
+    SelectionPlan,
+    available_encodings,
+    build_engine_fn,
+    get_engine,
+    plan_selection,
+    register_engine,
 )
 from repro.core.selection import FeatureSelector, infer_layout, mrmr_select  # noqa: F401

@@ -35,11 +35,16 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import contingency
 from repro.core.scores import CustomScore, MIScore, ScoreFn, mi_from_counts
+from repro.dist import compat
+from repro.dist.sharding import axes_tuple as _axes_tuple
 
 Array = jax.Array
 
-_NEG_INF = jnp.float32(-jnp.inf)
-_BIG_ID = jnp.int32(2**31 - 1)
+# Plain Python scalars, NOT jnp values: materialising a jnp constant at
+# import time would initialise the XLA backend and lock the device count
+# before launchers can set --xla_force_host_platform_device_count.
+_NEG_INF = float("-inf")
+_BIG_ID = 2**31 - 1
 
 
 @dataclasses.dataclass
@@ -54,19 +59,9 @@ class MRMRResult:
 # helpers
 # ---------------------------------------------------------------------------
 
-def _axes_tuple(axes) -> tuple:
-    if axes is None:
-        return ()
-    if isinstance(axes, (list, tuple)):
-        return tuple(axes)
-    return (axes,)
-
-
 def _pvary(x, axes: tuple):
     """Mark ``x`` as varying over ``axes`` (shard_map VMA typing helper)."""
-    if not axes:
-        return x
-    return jax.tree.map(lambda v: lax.pvary(v, axes), x)
+    return compat.pvary(x, axes)
 
 
 def _flat_axis_index(axes: Sequence[str], mesh_axis_sizes: dict) -> Array:
@@ -118,13 +113,15 @@ def mrmr_reference(
 ) -> MRMRResult:
     """Pure-jnp mRMR on one device. ``X_rows`` is feature-major (N, M)."""
     n, m = X_rows.shape
-    ids = jnp.arange(n, dtype=jnp.int32)
     custom = isinstance(score, CustomScore)
     use_incr = incremental and score.incremental_safe and not custom
 
     rel = None if custom else score.relevance(X_rows, y)
     state = _loop_state(n, num_select)
-    state["sel_rows"] = jnp.zeros((num_select, m), X_rows.dtype)
+    # Custom scores accumulate selected rows in f32, matching the
+    # alternative body (whose psum-gathered rows are always f32).
+    sel_dtype = jnp.float32 if custom else X_rows.dtype
+    state["sel_rows"] = jnp.zeros((num_select, m), sel_dtype)
 
     def body(l, st):
         denom = jnp.maximum(l, 1).astype(jnp.float32)
@@ -146,14 +143,13 @@ def mrmr_reference(
         st["selected"] = st["selected"].at[l].set(k.astype(jnp.int32))
         st["gains"] = st["gains"].at[l].set(g[k])
         st["sel_rows"] = lax.dynamic_update_slice(
-            st["sel_rows"], xk[None].astype(X_rows.dtype), (l, 0)
+            st["sel_rows"], xk[None].astype(sel_dtype), (l, 0)
         )
         if use_incr:
             st["red_sum"] = st["red_sum"] + score.redundancy(X_rows, xk)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
-    del ids
     return MRMRResult(selected=state["selected"], gains=state["gains"])
 
 
@@ -278,7 +274,7 @@ def make_conventional_fn(
     obs_axes = _axes_tuple(obs_axes)
     body = functools.partial(_conventional_body, obs_axes=obs_axes, **kwargs)
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(P(obs_axes, None), P(obs_axes)),
@@ -401,7 +397,7 @@ def make_alternative_fn(
         _alternative_body, feat_axes=feat_axes, axis_sizes=axis_sizes, **kwargs
     )
     return jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(P(feat_axes, None), P()),
@@ -492,6 +488,27 @@ def mrmr_grid(
     n_features: int | None = None,
 ) -> MRMRResult:
     """2-D sharded mRMR: observation axes × feature axes (beyond paper)."""
+    n_features = int(n_features if n_features is not None else X.shape[1])
+    fn = make_grid_fn(
+        num_select, score, n_features, mesh=mesh, obs_axes=obs_axes,
+        feat_axes=feat_axes, incremental=incremental, block=block,
+    )
+    sel, gains = fn(X, y)
+    return MRMRResult(sel, gains)
+
+
+def make_grid_fn(
+    num_select: int,
+    score: MIScore,
+    n_features: int,
+    *,
+    mesh: Mesh,
+    obs_axes=("data",),
+    feat_axes=("model",),
+    incremental: bool = True,
+    block: int = 64,
+):
+    """Jitted (X, y) -> (selected, gains) for the grid encoding."""
     if not isinstance(score, MIScore):
         raise ValueError("grid encoding is discrete/MI only")
     obs_axes, feat_axes = _axes_tuple(obs_axes), _axes_tuple(feat_axes)
@@ -499,7 +516,7 @@ def mrmr_grid(
     body = functools.partial(
         _grid_body,
         num_select=num_select,
-        n_features=int(n_features if n_features is not None else X.shape[1]),
+        n_features=int(n_features),
         score=score,
         obs_axes=obs_axes,
         feat_axes=feat_axes,
@@ -507,13 +524,11 @@ def mrmr_grid(
         block=block,
         incremental=incremental,
     )
-    fn = jax.jit(
-        jax.shard_map(
+    return jax.jit(
+        compat.shard_map(
             body,
             mesh=mesh,
             in_specs=(P(obs_axes, feat_axes), P(obs_axes)),
             out_specs=P(),
         )
     )
-    sel, gains = fn(X, y)
-    return MRMRResult(sel, gains)

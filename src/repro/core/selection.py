@@ -1,10 +1,11 @@
-"""Public feature-selection API: ``FeatureSelector`` / ``mrmr_select``.
+"""Legacy selection API — thin wrappers over :mod:`repro.core.selector`.
 
-Handles the practicalities the drivers don't: layout choice (the paper's
-T/N vs S/W distinction, §III), padding to mesh divisibility (padded
-observations use out-of-range category values so their one-hot contingency
-contribution is zero; padded features are masked out of the argmax), and
-host-side conveniences.
+``FeatureSelector`` / ``mrmr_select`` predate the unified ``MRMRSelector``
+front door and are kept as a compatibility surface: same fields, same
+``layout=`` vocabulary, same results.  New code should use
+``repro.MRMRSelector`` directly — it adds auto device planning
+(``plan_selection``), an inspectable ``SelectionPlan``, and an engine
+registry open to new encodings.
 """
 
 from __future__ import annotations
@@ -17,31 +18,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
-from repro.core import mrmr as mrmr_mod
 from repro.core.mrmr import MRMRResult
 from repro.core.scores import MIScore, PearsonMIScore, ScoreFn
+from repro.core.selector import MRMRSelector
 
 Array = jax.Array
-
-
-def _mesh_extent(mesh: Mesh | None, axes) -> int:
-    if mesh is None:
-        return 1
-    axes = mrmr_mod._axes_tuple(axes)
-    ext = 1
-    for a in axes:
-        ext *= mesh.shape[a]
-    return ext
-
-
-def _pad_axis(x, axis: int, multiple: int, fill):
-    size = x.shape[axis]
-    pad = (-size) % multiple
-    if pad == 0:
-        return x
-    widths = [(0, 0)] * x.ndim
-    widths[axis] = (0, pad)
-    return jnp.pad(x, widths, constant_values=fill)
 
 
 def infer_layout(n_obs: int, n_feat: int) -> str:
@@ -53,18 +34,9 @@ def infer_layout(n_obs: int, n_feat: int) -> str:
 class FeatureSelector:
     """mRMR feature selection with the paper's two encodings (+grid).
 
-    Args:
-      num_select: L, number of features to pick.
-      score: a ``ScoreFn`` (default: exact discrete MI, as the paper).
-      layout: "auto" | "conventional" | "alternative" | "grid".
-        Inputs are ALWAYS given in conventional orientation (observations ×
-        features); layout selects the distribution strategy (and, for
-        "alternative", the transposed storage) per paper §III.
-      mesh: device mesh (None = single device).
-      obs_axes / feat_axes: mesh axes for observation / feature sharding.
-      incremental: False reproduces the paper's per-iteration redundancy
-        recomputation; True enables the O(N·L) running-sum optimisation
-        (identical selections, validated by tests).
+    Compatibility alias of :class:`repro.core.selector.MRMRSelector`:
+    ``layout`` maps onto ``encoding`` ("auto" resolves with the original
+    shape rule — grid only when requested explicitly).
     """
 
     num_select: int
@@ -79,72 +51,24 @@ class FeatureSelector:
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
 
-    def _resolve(self, X, y) -> tuple[str, ScoreFn]:
+    def _encoding_for(self, X: Array) -> str:
+        if self.layout != "auto":
+            return self.layout
         m, n = X.shape
         discrete = jnp.issubdtype(X.dtype, jnp.integer) or X.dtype == jnp.bool_
-        layout = self.layout
-        if layout == "auto":
-            # Paper §III: T/N -> conventional; S/W or continuous -> alternative.
-            layout = infer_layout(m, n) if discrete else "alternative"
-        score = self.score
-        if score is None:
-            if discrete:
-                score = MIScore(
-                    num_values=int(jnp.max(X)) + 1,
-                    num_classes=int(jnp.max(y)) + 1,
-                )
-            else:
-                score = PearsonMIScore()
-        return layout, score
+        return infer_layout(m, n) if discrete else "alternative"
 
     def fit(self, X, y) -> "FeatureSelector":
         """X: (observations, features) — conventional orientation; y: (obs,)."""
         X = jnp.asarray(X)
-        y = jnp.asarray(y).astype(jnp.int32)
-        m, n = X.shape
-        layout, score = self._resolve(X, y)
-        if layout in ("conventional", "grid"):
-            X = X.astype(jnp.int32)
-
-        if layout == "conventional":
-            ext = _mesh_extent(self.mesh, self.obs_axes)
-            # Pad observations with out-of-range categories: zero one-hot
-            # contribution, so contingency tables are exact.
-            Xp = _pad_axis(X, 0, ext, fill=np.iinfo(np.int32).max)
-            yp = _pad_axis(y, 0, ext, fill=np.iinfo(np.int32).max)
-            res = mrmr_mod.mrmr_conventional(
-                Xp, yp, self.num_select, score,
-                mesh=self.mesh, obs_axes=self.obs_axes,
-                incremental=self.incremental, block=self.block,
-            )
-        elif layout == "alternative":
-            ext = _mesh_extent(self.mesh, self.feat_axes)
-            Xr = _pad_axis(X.T, 0, ext, fill=0)
-            res = mrmr_mod.mrmr_alternative(
-                Xr, y, self.num_select, score,
-                mesh=self.mesh, feat_axes=self.feat_axes,
-                incremental=self.incremental, n_features=n,
-            )
-        elif layout == "grid":
-            if self.mesh is None:
-                raise ValueError("grid layout requires a mesh")
-            oext = _mesh_extent(self.mesh, self.obs_axes)
-            fext = _mesh_extent(self.mesh, self.feat_axes)
-            Xp = _pad_axis(X, 0, oext, fill=np.iinfo(np.int32).max)
-            Xp = _pad_axis(Xp, 1, fext, fill=0)
-            yp = _pad_axis(y, 0, oext, fill=np.iinfo(np.int32).max)
-            res = mrmr_mod.mrmr_grid(
-                Xp, yp, self.num_select, score,
-                mesh=self.mesh, obs_axes=self.obs_axes,
-                feat_axes=self.feat_axes,
-                incremental=self.incremental, block=self.block,
-                n_features=n,
-            )
-        else:
-            raise ValueError(f"unknown layout {layout!r}")
-
-        self.selected_ = np.asarray(res.selected)
-        self.gains_ = np.asarray(res.gains)
+        sel = MRMRSelector(
+            num_select=self.num_select, score=self.score,
+            encoding=self._encoding_for(X), mesh=self.mesh,
+            obs_axes=self.obs_axes, feat_axes=self.feat_axes,
+            incremental=self.incremental, block=self.block,
+        ).fit(X, y)
+        self.selected_ = sel.selected_
+        self.gains_ = sel.gains_
         return self
 
     def transform(self, X):

@@ -1,0 +1,507 @@
+"""The front-door selection API: ``MRMRSelector`` / ``SelectionPlan``.
+
+One estimator-style entry point for every distribution strategy in the
+repo.  The design splits feature selection into three layers:
+
+1. **Planning** — ``plan_selection`` implements the paper's §III rule
+   (tall/narrow -> conventional encoding, wide/short -> alternative,
+   both-large -> 2-D grid) and factors the available devices into a mesh
+   shape.  The result is a ``SelectionPlan``: a frozen, inspectable record
+   of encoding, mesh axes/shape, block size, incremental flag and score.
+2. **Engines** — a registry mapping encoding names to fit functions.  The
+   four built-in drivers (reference / conventional / alternative / grid)
+   register here; new strategies (streaming shards, other score layouts)
+   drop in via ``register_engine`` without touching the drivers.
+3. **The selector** — ``MRMRSelector.fit(X, y)`` resolves the plan, builds
+   the mesh, and hands off to the engine.  Padding to mesh divisibility,
+   layout transposition (inputs are ALWAYS observations × features),
+   device placement and result unpadding are all owned here; callers never
+   see ``shard_map``.
+
+    >>> from repro import MRMRSelector
+    >>> sel = MRMRSelector(num_select=10).fit(X, y)
+    >>> X_reduced = sel.transform(X)          # columns in selection order
+    >>> sel.plan_                             # the resolved SelectionPlan
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import mrmr as mrmr_mod
+from repro.core.mrmr import MRMRResult
+from repro.core.scores import MIScore, PearsonMIScore, ScoreFn
+from repro.dist.meshes import factor_mesh, make_mesh
+from repro.dist.sharding import axes_tuple as _axes_tuple, mesh_extent
+
+Array = jax.Array
+
+# Paper §III aspect-ratio rule: beyond these ratios one axis dominates and
+# single-axis sharding wins; between them (and with enough devices and
+# data) the 2-D grid removes both memory walls at once.
+TALL_RATIO = 4.0      # obs/feat >= this -> conventional (observation-sharded)
+WIDE_RATIO = 0.25     # obs/feat <= this -> alternative (feature-sharded)
+GRID_MIN_DIM = 512    # both dims at least this before a grid pays off
+GRID_MIN_DEVICES = 4  # a 2-D mesh needs at least a 2x2 factorisation
+
+
+@dataclasses.dataclass(frozen=True)
+class SelectionPlan:
+    """Resolved distribution strategy for one ``fit``.
+
+    ``mesh_shape`` aligns with ``obs_axes + feat_axes``; empty means run
+    unsharded.  ``score=None`` means "resolve from the data at fit time"
+    (discrete -> exact MI, continuous -> Pearson-MI).
+    """
+
+    encoding: str                     # reference|conventional|alternative|grid
+    obs_axes: tuple = ()              # mesh axes sharding observations
+    feat_axes: tuple = ()             # mesh axes sharding features
+    mesh_shape: tuple = ()            # extents, aligned with mesh_axes
+    block: int = 64                   # contingency feature-block size
+    incremental: bool = True          # running redundancy sum vs recompute
+    score: ScoreFn | None = None      # score spec (None = auto from data)
+    onehot_dtype: str = "bfloat16"    # contingency one-hot storage dtype
+    static_inner: bool = False        # fixed-trip recompute loop (dry-run)
+
+    @property
+    def mesh_axes(self) -> tuple:
+        return self.obs_axes + self.feat_axes
+
+    @property
+    def num_shards(self) -> int:
+        return math.prod(self.mesh_shape) if self.mesh_shape else 1
+
+
+def _device_count(devices) -> int:
+    if devices is None:
+        return len(jax.devices())
+    if isinstance(devices, Mesh):
+        return devices.size
+    if isinstance(devices, int):
+        return devices
+    return len(devices)
+
+
+def plan_selection(
+    shape: tuple,
+    devices=None,
+    score: ScoreFn | None = None,
+    *,
+    obs_axes: Sequence[str] | str = ("data",),
+    feat_axes: Sequence[str] | str = ("model",),
+    incremental: bool = True,
+    block: int = 64,
+) -> SelectionPlan:
+    """Pick encoding + mesh for a dataset shape (paper §III).
+
+    Args:
+      shape: (observations, features) of the conventional-orientation input.
+      devices: device budget — an int, a device list, a ``Mesh`` (planning
+        is then constrained to its axes), or None for all local devices.
+      score: the score spec.  Non-MI scores force the alternative encoding
+        (the only map-only layout that supports arbitrary scores, §IV.D).
+    """
+    m, n = int(shape[0]), int(shape[1])
+    obs_axes, feat_axes = _axes_tuple(obs_axes), _axes_tuple(feat_axes)
+    n_dev = _device_count(devices)
+    mesh = devices if isinstance(devices, Mesh) else None
+    if mesh is not None:
+        obs_axes = tuple(a for a in obs_axes if a in mesh.shape)
+        feat_axes = tuple(a for a in feat_axes if a in mesh.shape)
+
+    mi_ok = score is None or isinstance(score, MIScore)
+    aspect = m / max(n, 1)
+    can_grid = (
+        mi_ok
+        and n_dev >= GRID_MIN_DEVICES
+        and min(m, n) >= GRID_MIN_DIM
+        and WIDE_RATIO < aspect < TALL_RATIO
+        and (mesh is None or (obs_axes and feat_axes))
+    )
+    if not mi_ok:
+        encoding = "alternative"
+    elif can_grid:
+        encoding = "grid"
+    elif aspect >= 1.0:
+        encoding = "conventional"
+    else:
+        encoding = "alternative"
+
+    common = dict(block=block, incremental=incremental, score=score)
+    if n_dev <= 1 and mesh is None:
+        # Single device: encoding still follows the shape (the drivers run
+        # unsharded), so plans are stable as the fleet scales.
+        if encoding == "grid":
+            encoding = "conventional" if aspect >= 1.0 else "alternative"
+        return SelectionPlan(encoding=encoding, **common)
+
+    if mesh is not None:
+        if encoding == "conventional" and not obs_axes:
+            encoding = "alternative" if feat_axes else "reference"
+        if encoding == "alternative" and not feat_axes:
+            # Only MI scores may reroute to the conventional engine; any
+            # other score falls back to the score-agnostic reference.
+            encoding = "conventional" if (obs_axes and mi_ok) else "reference"
+        if encoding == "reference":
+            return SelectionPlan("reference", **common)
+        shape_of = lambda axes: tuple(mesh.shape[a] for a in axes)
+        if encoding == "conventional":
+            return SelectionPlan(
+                encoding, obs_axes=obs_axes, mesh_shape=shape_of(obs_axes),
+                **common,
+            )
+        if encoding == "alternative":
+            return SelectionPlan(
+                encoding, feat_axes=feat_axes, mesh_shape=shape_of(feat_axes),
+                **common,
+            )
+        return SelectionPlan(
+            encoding, obs_axes=obs_axes, feat_axes=feat_axes,
+            mesh_shape=shape_of(obs_axes + feat_axes), **common,
+        )
+
+    if encoding == "grid":
+        # Weight the device split by the aspect ratio: a taller dataset
+        # gets more observation shards.
+        od, fd = factor_mesh(n_dev, bias=max(aspect, 1e-6))
+        if min(od, fd) == 1:  # prime device count: grid degenerates
+            encoding = "conventional" if aspect >= 1.0 else "alternative"
+        else:
+            return SelectionPlan(
+                "grid", obs_axes=obs_axes[:1] or ("data",),
+                feat_axes=feat_axes[:1] or ("model",),
+                mesh_shape=(od, fd), **common,
+            )
+    if encoding == "conventional":
+        return SelectionPlan(
+            "conventional", obs_axes=obs_axes[:1] or ("data",),
+            mesh_shape=(n_dev,), **common,
+        )
+    return SelectionPlan(
+        "alternative", feat_axes=feat_axes[:1] or ("model",),
+        mesh_shape=(n_dev,), **common,
+    )
+
+
+# ---------------------------------------------------------------------------
+# engine registry
+# ---------------------------------------------------------------------------
+
+# name -> fit(X, y, *, num_select, plan, mesh) -> MRMRResult, with X in
+# conventional orientation (observations × features) and global feature ids
+# in the result.  Engines own their padding / transposition / placement.
+_ENGINES: dict = {}
+
+
+def register_engine(name: str) -> Callable:
+    """Register a selection engine under an encoding name (decorator)."""
+
+    def deco(fn):
+        _ENGINES[name] = fn
+        return fn
+
+    return deco
+
+
+def get_engine(name: str):
+    try:
+        return _ENGINES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown encoding {name!r}; registered: {sorted(_ENGINES)}"
+        ) from None
+
+
+def available_encodings() -> tuple:
+    return tuple(sorted(_ENGINES))
+
+
+def build_engine_fn(
+    plan: SelectionPlan, mesh: Mesh | None, num_select: int, n_features: int
+):
+    """Jitted (X, y) -> (selected, gains) in the engine's NATIVE layout.
+
+    Native layouts: conventional/grid take (obs, feat) [padded to mesh
+    divisibility]; reference/alternative take feature-major (feat, obs).
+    Benchmarks use this directly to ``.lower().compile()`` the exact job
+    the selector would run.
+    """
+    enc, score = plan.encoding, plan.score
+    oh_dt = jnp.dtype(plan.onehot_dtype)
+    if enc == "reference":
+
+        def ref_fn(Xr, y):
+            res = mrmr_mod.mrmr_reference(
+                Xr, y, num_select, score, incremental=plan.incremental
+            )
+            return res.selected, res.gains
+
+        return jax.jit(ref_fn)
+    if enc == "conventional":
+        return mrmr_mod.make_conventional_fn(
+            num_select, score, mesh=mesh, obs_axes=plan.obs_axes,
+            incremental=plan.incremental, block=plan.block,
+            onehot_dtype=oh_dt, static_inner=plan.static_inner,
+        )
+    if enc == "alternative":
+        return mrmr_mod.make_alternative_fn(
+            num_select, score, n_features, mesh=mesh,
+            feat_axes=plan.feat_axes, incremental=plan.incremental,
+        )
+    if enc == "grid":
+        if mesh is None:
+            raise ValueError("grid encoding requires a mesh")
+        return mrmr_mod.make_grid_fn(
+            num_select, score, n_features, mesh=mesh,
+            obs_axes=plan.obs_axes, feat_axes=plan.feat_axes,
+            incremental=plan.incremental, block=plan.block,
+        )
+    raise ValueError(f"unknown encoding {enc!r}")
+
+
+def _pad_axis(x: Array, axis: int, multiple: int, fill) -> Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=fill)
+
+
+def _place(x: Array, mesh: Mesh | None, spec: P) -> Array:
+    if mesh is None:
+        return x
+    return jax.device_put(x, NamedSharding(mesh, spec))
+
+
+_OOR = np.iinfo(np.int32).max  # out-of-range category: zero one-hot row
+
+
+@register_engine("reference")
+def _fit_reference(X, y, *, num_select, plan, mesh) -> MRMRResult:
+    del mesh
+    res = mrmr_mod.mrmr_reference(
+        jnp.asarray(X).T, y, num_select, plan.score,
+        incremental=plan.incremental,
+    )
+    return res
+
+
+@register_engine("conventional")
+def _fit_conventional(X, y, *, num_select, plan, mesh) -> MRMRResult:
+    ext = mesh_extent(mesh, plan.obs_axes)
+    # Padded observations carry out-of-range categories: their one-hot rows
+    # are all-zero, so contingency tables stay exact without masking.
+    Xp = _pad_axis(X.astype(jnp.int32), 0, ext, fill=_OOR)
+    yp = _pad_axis(y, 0, ext, fill=_OOR)
+    Xp = _place(Xp, mesh, P(plan.obs_axes, None))
+    yp = _place(yp, mesh, P(plan.obs_axes))
+    fn = build_engine_fn(plan, mesh, num_select, X.shape[1])
+    sel, gains = fn(Xp, yp)
+    return MRMRResult(sel, gains)
+
+
+@register_engine("alternative")
+def _fit_alternative(X, y, *, num_select, plan, mesh) -> MRMRResult:
+    n = X.shape[1]
+    ext = mesh_extent(mesh, plan.feat_axes)
+    # Feature-major storage; padded feature rows are masked out of the
+    # argmax by the driver (ids >= n_features).
+    Xr = _pad_axis(jnp.asarray(X).T, 0, ext, fill=0)
+    Xr = _place(Xr, mesh, P(plan.feat_axes, None))
+    yb = _place(y, mesh, P())
+    fn = build_engine_fn(plan, mesh, num_select, n)
+    sel, gains = fn(Xr, yb)
+    return MRMRResult(sel, gains)
+
+
+@register_engine("grid")
+def _fit_grid(X, y, *, num_select, plan, mesh) -> MRMRResult:
+    if mesh is None:
+        raise ValueError("grid encoding requires a mesh")
+    n = X.shape[1]
+    oext = mesh_extent(mesh, plan.obs_axes)
+    fext = mesh_extent(mesh, plan.feat_axes)
+    Xp = _pad_axis(X.astype(jnp.int32), 0, oext, fill=_OOR)
+    Xp = _pad_axis(Xp, 1, fext, fill=0)
+    yp = _pad_axis(y, 0, oext, fill=_OOR)
+    Xp = _place(Xp, mesh, P(plan.obs_axes, plan.feat_axes))
+    yp = _place(yp, mesh, P(plan.obs_axes))
+    fn = build_engine_fn(plan, mesh, num_select, n)
+    sel, gains = fn(Xp, yp)
+    return MRMRResult(sel, gains)
+
+
+# ---------------------------------------------------------------------------
+# the selector
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class MRMRSelector:
+    """mRMR feature selection with auto-planned distribution.
+
+    Scikit-learn-style estimator: ``fit(X, y)`` -> self with ``selected_``
+    / ``gains_`` / ``plan_``; ``transform(X)`` returns the selected columns
+    in selection order.  ``X`` is always (observations × features); the
+    encoding only changes how the work is distributed, never the input
+    orientation.
+
+    Args:
+      num_select: L, number of features to pick.
+      score: a ``ScoreFn``; None resolves from the data (discrete -> exact
+        MI with inferred cardinalities, continuous -> Pearson-MI).
+      encoding: "auto" (paper §III rule via ``plan_selection``) or one of
+        ``available_encodings()``.
+      mesh: an existing device mesh to run on; None lets the planner build
+        one from ``devices``.
+      devices: device budget for auto-planning (int, device list, or None
+        for all local devices).  Ignored when ``mesh`` is given.
+      obs_axes / feat_axes: mesh axis names for observation / feature
+        sharding (intersected with the mesh's axes).
+      incremental: False reproduces the paper's per-iteration redundancy
+        recomputation; True keeps a running sum (identical selections).
+      block: contingency feature-block size.
+    """
+
+    num_select: int
+    score: ScoreFn | None = None
+    encoding: str = "auto"
+    mesh: Mesh | None = None
+    devices: object = None
+    obs_axes: Sequence[str] | str = ("data",)
+    feat_axes: Sequence[str] | str = ("model",)
+    incremental: bool = True
+    block: int = 64
+
+    selected_: np.ndarray | None = None
+    gains_: np.ndarray | None = None
+    plan_: SelectionPlan | None = None
+    mesh_: Mesh | None = None
+
+    def _resolve_score(self, X: Array, y: Array) -> ScoreFn:
+        if self.score is not None:
+            return self.score
+        discrete = (
+            jnp.issubdtype(X.dtype, jnp.integer) or X.dtype == jnp.bool_
+        )
+        if discrete:
+            return MIScore(
+                num_values=int(jnp.max(X)) + 1,
+                num_classes=int(jnp.max(y)) + 1,
+            )
+        return PearsonMIScore()
+
+    def _resolve_plan(self, shape: tuple, score: ScoreFn) -> SelectionPlan:
+        if self.encoding == "auto":
+            devices = self.mesh if self.mesh is not None else self.devices
+            return plan_selection(
+                shape, devices, score,
+                obs_axes=self.obs_axes, feat_axes=self.feat_axes,
+                incremental=self.incremental, block=self.block,
+            )
+        obs = _axes_tuple(self.obs_axes)
+        feat = _axes_tuple(self.feat_axes)
+        if self.mesh is not None:
+            obs = tuple(a for a in obs if a in self.mesh.shape)
+            feat = tuple(a for a in feat if a in self.mesh.shape)
+        axes = {
+            "reference": ((), ()),
+            "conventional": (obs, ()),
+            "alternative": ((), feat),
+            "grid": (obs, feat),
+        }.get(self.encoding, (obs, feat))
+        if self.mesh is not None:
+            shape_of = tuple(self.mesh.shape[a] for a in axes[0] + axes[1])
+        else:
+            # No mesh given: build one from the device budget, so an
+            # explicitly requested encoding still scales out.
+            n_dev = _device_count(self.devices)
+            m, n = shape
+            if self.encoding == "grid":
+                # Degenerate 1x1 grid on a single device: the encoding
+                # always runs rather than erroring on small hosts.
+                axes = (axes[0][:1] or ("data",), axes[1][:1] or ("model",))
+                shape_of = (
+                    factor_mesh(n_dev, bias=max(m / max(n, 1), 1e-6))
+                    if n_dev > 1
+                    else (1, 1)
+                )
+            elif n_dev <= 1 or self.encoding == "reference":
+                axes, shape_of = ((), ()), ()
+            elif self.encoding == "conventional":
+                axes = (axes[0][:1] or ("data",), ())
+                shape_of = (n_dev,)
+            elif self.encoding == "alternative":
+                axes = ((), axes[1][:1] or ("model",))
+                shape_of = (n_dev,)
+            else:  # custom-registered engine: runs unsharded unless a
+                shape_of = ()  # mesh is passed in explicitly
+
+        return SelectionPlan(
+            encoding=self.encoding, obs_axes=axes[0], feat_axes=axes[1],
+            mesh_shape=shape_of, block=self.block,
+            incremental=self.incremental, score=score,
+        )
+
+    def _resolve_mesh(self, plan: SelectionPlan) -> Mesh | None:
+        if self.mesh is not None:
+            return self.mesh if plan.mesh_axes else None
+        if not plan.mesh_shape:
+            return None
+        devices = self.devices if not isinstance(self.devices, int) else None
+        return make_mesh(plan.mesh_shape, plan.mesh_axes, devices=devices)
+
+    def fit(self, X, y) -> "MRMRSelector":
+        """X: (observations, features); y: (observations,) targets."""
+        X = jnp.asarray(X)
+        y = jnp.asarray(y)
+        if X.ndim != 2 or y.shape[0] != X.shape[0]:
+            raise ValueError(f"bad shapes X{X.shape} y{y.shape}")
+        if not 0 < self.num_select <= X.shape[1]:
+            raise ValueError(
+                f"num_select={self.num_select} out of range for "
+                f"{X.shape[1]} features"
+            )
+        score = self._resolve_score(X, y)
+        # Discrete MI scores need integral class labels; every other score
+        # (Pearson, custom) keeps continuous targets intact.
+        y = y.astype(jnp.int32 if isinstance(score, MIScore) else jnp.float32)
+        plan = self._resolve_plan(X.shape, score)
+        if plan.score is None:
+            plan = dataclasses.replace(plan, score=score)
+        mesh = self._resolve_mesh(plan)
+        engine = get_engine(plan.encoding)
+        res = engine(X, y, num_select=self.num_select, plan=plan, mesh=mesh)
+        self.selected_ = np.asarray(res.selected)
+        self.gains_ = np.asarray(res.gains)
+        self.plan_ = plan
+        self.mesh_ = mesh
+        return self
+
+    def transform(self, X):
+        """Selected columns of ``X``, ordered by selection rank."""
+        if self.selected_ is None:
+            raise RuntimeError("fit() first")
+        return np.asarray(X)[:, self.selected_]
+
+    def fit_transform(self, X, y):
+        return self.fit(X, y).transform(X)
+
+
+__all__ = [
+    "MRMRSelector",
+    "SelectionPlan",
+    "plan_selection",
+    "register_engine",
+    "get_engine",
+    "available_encodings",
+    "build_engine_fn",
+]

@@ -1,0 +1,25 @@
+"""repro.dist — the distribution substrate.
+
+Everything that touches device topology lives here, so the rest of the
+repo (drivers, models, launchers) never talks to raw jax device state:
+
+* ``repro.dist.compat``   — version-portable ``shard_map`` / ``pvary``
+  (jax moved both across releases; call sites import from here).
+* ``repro.dist.meshes``   — ``make_mesh``: named device meshes from a
+  (shape, axis-names) pair, the single mesh constructor in the repo.
+* ``repro.dist.sharding`` — logical-axis sharding: ``ShardingRules`` maps
+  logical parameter axes (``fsdp``, ``ff``, ``heads``, ...) to mesh axes,
+  ``logical_to_spec`` resolves them to ``PartitionSpec`` with divisibility
+  and axis-reuse guards.
+* ``repro.dist.pipeline`` — GPipe pipeline parallelism over a mesh axis.
+"""
+
+from repro.dist.compat import pvary, shard_map  # noqa: F401
+from repro.dist.meshes import make_mesh  # noqa: F401
+from repro.dist.sharding import (  # noqa: F401
+    ShardingRules,
+    axes_tuple,
+    logical_to_spec,
+    mesh_extent,
+    rules_for,
+)

@@ -1,0 +1,42 @@
+"""Version-portable jax collectives API.
+
+The repo targets the modern spellings (``jax.shard_map``, ``lax.pvary``);
+older installs (<= 0.4.x) only ship ``jax.experimental.shard_map`` and have
+no ``pvary`` (its VMA bookkeeping does not exist there, so identity is the
+correct fallback).  All call sites import from this module so the rest of
+the codebase is version-agnostic.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+if hasattr(jax, "shard_map"):
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map_exp
+
+    def shard_map(f, *, mesh, in_specs, out_specs):
+        # check_rep=False: the legacy replication checker predates several
+        # collectives used here (pmax/pmin argmax ladders) and has no pvary
+        # escape hatch; the out_specs still pin the contract.
+        return _shard_map_exp(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False
+        )
+
+
+if hasattr(lax, "pvary"):
+
+    def pvary(x, axes):
+        if not axes:
+            return x
+        return jax.tree.map(lambda v: lax.pvary(v, axes), x)
+
+else:
+
+    def pvary(x, axes):  # pre-VMA jax: values carry no varying-axes type
+        return x

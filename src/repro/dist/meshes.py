@@ -1,0 +1,68 @@
+"""Named device meshes.
+
+``make_mesh`` is the one mesh constructor in the repo: everything from the
+2-device CPU debug mesh to the 512-chip dry-run pod goes through it, so
+device selection and axis naming cannot drift between launchers, tests and
+benchmarks.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_mesh(
+    shape: Sequence[int],
+    axes: Sequence[str],
+    *,
+    devices=None,
+) -> Mesh:
+    """Build a named ``Mesh`` of the given shape.
+
+    Args:
+      shape: extent per mesh axis, e.g. ``(16, 16)``.
+      axes: axis name per extent, e.g. ``("data", "model")``.
+      devices: devices to lay out (default: all local ``jax.devices()``).
+        Exactly ``prod(shape)`` leading devices are used.
+    """
+    shape, axes = tuple(int(s) for s in shape), tuple(axes)
+    if len(shape) != len(axes):
+        raise ValueError(f"shape {shape} and axes {axes} length mismatch")
+    n = math.prod(shape)
+    if devices is None:
+        devices = jax.devices()
+    if len(devices) < n:
+        raise ValueError(
+            f"mesh {dict(zip(axes, shape))} needs {n} devices, "
+            f"have {len(devices)}"
+        )
+    devices = list(devices)[:n]
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(shape, axes, devices=devices)
+    return Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def factor_mesh(n_devices: int, *, bias: float = 1.0) -> tuple[int, int]:
+    """Split ``n_devices`` into a 2-D grid ``(a, b)``, ``a*b == n_devices``.
+
+    ``bias`` > 1 pushes devices toward the first axis (used by the selection
+    planner to give the longer data axis more shards).  Prefers balanced
+    factorisations; falls back to ``(n, 1)`` for primes.
+    """
+    if n_devices <= 0:
+        raise ValueError(f"n_devices must be positive, got {n_devices}")
+    target = math.sqrt(n_devices * bias)
+    best = (n_devices, 1)
+    best_err = float("inf")
+    for a in range(1, n_devices + 1):
+        if n_devices % a:
+            continue
+        err = abs(math.log(a / target)) if target > 0 else float(a)
+        if err < best_err:
+            best, best_err = (a, n_devices // a), err
+    return best

@@ -3,14 +3,30 @@
     PYTHONPATH=src python -m repro.launch.select --rows 100000 --cols 1000 \
         --select 10 --encoding conventional
 
+    # 2-D grid over 8 simulated devices, explicit mesh shape:
+    PYTHONPATH=src REPRO_DEVICES=8 python -m repro.launch.select \
+        --encoding grid --mesh-obs 4 --mesh-feat 2
+
 Input: ``--input data.npz`` with arrays ``X`` (rows=observations) and ``y``,
-or the paper's CorrAL-style synthetic generator by default.  The device
-mesh is whatever jax exposes (all local devices): observations sharded for
-the conventional encoding, features for the alternative encoding — the same
-axes the LM workloads use for DP and TP.
+or the paper's CorrAL-style synthetic generator by default.  The whole
+distribution strategy goes through :class:`repro.MRMRSelector`: encoding
+``auto`` applies the paper's §III aspect-ratio rule, explicit encodings
+shard over whatever devices jax exposes, and ``grid`` places a 2-D
+(observation × feature) mesh — shape from ``--mesh-obs``/``--mesh-feat`` or
+auto-factored.  ``REPRO_DEVICES=N`` forces N simulated host devices (set
+before jax initialises).
 """
 
 from __future__ import annotations
+
+import os
+
+_DEVICES = int(os.environ.get("REPRO_DEVICES", "0"))
+if _DEVICES > 1:
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={_DEVICES} "
+        + os.environ.get("XLA_FLAGS", "")
+    )
 
 import argparse
 import json
@@ -18,10 +34,9 @@ import time
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.core.mrmr import make_alternative_fn, make_conventional_fn
 from repro.core.scores import MIScore, PearsonMIScore
+from repro.core.selector import MRMRSelector, available_encodings
 from repro.data.synthetic import corral_dataset_np
 from repro.dist.meshes import make_mesh
 
@@ -33,11 +48,16 @@ def main(argv=None) -> dict:
     ap.add_argument("--cols", type=int, default=1000)
     ap.add_argument("--select", type=int, default=10)
     ap.add_argument("--encoding", default="auto",
-                    choices=["auto", "conventional", "alternative"])
+                    choices=("auto",) + available_encodings())
+    ap.add_argument("--mesh-obs", type=int, default=0,
+                    help="observation-axis mesh extent (grid; 0 = auto)")
+    ap.add_argument("--mesh-feat", type=int, default=0,
+                    help="feature-axis mesh extent (grid; 0 = auto)")
     ap.add_argument("--score", default="mi", choices=["mi", "pearson"])
     ap.add_argument("--num-values", type=int, default=2)
     ap.add_argument("--num-classes", type=int, default=2)
     ap.add_argument("--incremental", type=int, default=1)
+    ap.add_argument("--block", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -46,54 +66,34 @@ def main(argv=None) -> dict:
         X, y = data["X"], data["y"]
     else:
         X, y = corral_dataset_np(args.rows, args.cols, seed=args.seed)
-    m, n = X.shape
-    enc = args.encoding
-    if enc == "auto":  # paper §III: layout follows the aspect ratio
-        enc = "conventional" if m >= n else "alternative"
 
-    n_dev = len(jax.devices())
-    t0 = time.time()
-    if enc == "conventional":
-        mesh = make_mesh((n_dev,), ("data",)) if n_dev > 1 else None
-        pad = (-m) % max(n_dev, 1)
-        if pad:
-            X = np.concatenate([X, np.full((pad, n), args.num_values, X.dtype)])
-            y = np.concatenate([y, np.full((pad,), args.num_classes, y.dtype)])
-        score = MIScore(num_values=args.num_values, num_classes=args.num_classes)
-        fn = make_conventional_fn(
-            args.select, score, mesh=mesh, incremental=bool(args.incremental)
-        )
-        if mesh is not None:
-            X = jax.device_put(X, NamedSharding(mesh, P("data", None)))
-            y = jax.device_put(y, NamedSharding(mesh, P("data")))
-        sel, gains = fn(X, y)
+    if args.score == "mi":
+        score = MIScore(num_values=args.num_values,
+                        num_classes=args.num_classes)
     else:
-        Xr = np.ascontiguousarray(X.T)
-        mesh = make_mesh((n_dev,), ("model",)) if n_dev > 1 else None
-        pad = (-n) % max(n_dev, 1)
-        if pad:
-            Xr = np.concatenate([Xr, np.zeros((pad, m), Xr.dtype)])
-        if args.score == "mi":
-            score = MIScore(
-                num_values=args.num_values, num_classes=args.num_classes
-            )
-        else:
-            score = PearsonMIScore()
-            Xr = Xr.astype(np.float32)
-            y = y.astype(np.float32)
-        fn = make_alternative_fn(
-            args.select, score, n, mesh=mesh,
-            incremental=bool(args.incremental),
-        )
-        if mesh is not None:
-            Xr = jax.device_put(Xr, NamedSharding(mesh, P("model", None)))
-            y = jax.device_put(y, NamedSharding(mesh, P()))
-        sel, gains = fn(Xr, y)
+        score = PearsonMIScore()
+        X = X.astype(np.float32)
+
+    mesh = None
+    if args.mesh_obs or args.mesh_feat:
+        n_dev = len(jax.devices())
+        obs = args.mesh_obs or max(n_dev // max(args.mesh_feat, 1), 1)
+        feat = args.mesh_feat or max(n_dev // obs, 1)
+        mesh = make_mesh((obs, feat), ("data", "model"))
+
+    t0 = time.time()
+    sel = MRMRSelector(
+        num_select=args.select, score=score, encoding=args.encoding,
+        mesh=mesh, incremental=bool(args.incremental), block=args.block,
+    ).fit(X, y)
+    plan = sel.plan_
     out = {
-        "encoding": enc,
-        "devices": n_dev,
-        "selected": np.asarray(sel).tolist(),
-        "gains": [round(float(g), 5) for g in np.asarray(gains)],
+        "encoding": plan.encoding,
+        "mesh": dict(zip(plan.mesh_axes, plan.mesh_shape)),
+        "devices": len(jax.devices()),
+        "incremental": plan.incremental,
+        "selected": sel.selected_.tolist(),
+        "gains": [round(float(g), 5) for g in sel.gains_],
         "seconds": round(time.time() - t0, 3),
     }
     print(json.dumps(out))

@@ -1,0 +1,4 @@
+# Package marker: the md_* helper scripts in here are executed as
+# subprocesses by tests/test_multidevice.py, never collected by pytest.
+# Being a proper package keeps pytest from warning about invalid module
+# names during collection.

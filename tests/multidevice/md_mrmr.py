@@ -18,6 +18,7 @@ import numpy as np  # noqa: E402
 from repro.core import (  # noqa: E402
     FeatureSelector,
     MIScore,
+    MRMRSelector,
     PearsonMIScore,
     mrmr_alternative,
     mrmr_conventional,
@@ -115,6 +116,31 @@ def main() -> None:
     ).fit(np.asarray(Xb, dtype=np.int32), np.asarray(yb))
     assert len(set(res.selected_.tolist()) & set(range(8))) >= 6
     print("corral grid e2e: OK")
+
+    # --- MRMRSelector front door: every encoding on real 8-device meshes ---
+    for encoding, msh in [
+        ("conventional", mesh8),
+        ("alternative", mesh_m),
+        ("grid", mesh_g),
+    ]:
+        sel = MRMRSelector(
+            num_select=L, score=score, encoding=encoding, mesh=msh
+        ).fit(X, y)
+        np.testing.assert_array_equal(sel.selected_, ref_sel)
+        print(f"MRMRSelector {encoding} (explicit mesh): OK")
+
+    # auto-planned: the selector builds its own mesh from the 8 devices
+    for shape_hint, Xa, ya in [
+        ("tall", X, y),
+        ("wide", X[:20], y[:20]),
+    ]:
+        sel = MRMRSelector(num_select=4, score=score).fit(Xa, ya)
+        want = mrmr_reference(
+            jnp.asarray(Xa.T), jnp.asarray(ya), 4, score
+        )
+        np.testing.assert_array_equal(sel.selected_, np.asarray(want.selected))
+        print(f"MRMRSelector auto ({shape_hint} -> "
+              f"{sel.plan_.encoding}, mesh={sel.plan_.mesh_shape}): OK")
 
     print("ALL-MD-MRMR-OK")
 

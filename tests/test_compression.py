@@ -6,6 +6,7 @@ import numpy as np
 import pytest
 from jax.sharding import PartitionSpec as P
 
+from repro.dist import compat
 from repro.train.compression import GradCompression, compressed_psum
 
 
@@ -59,7 +60,7 @@ def test_compressed_psum_matches_mean():
         return out["g"]
 
     fn = jax.jit(
-        jax.shard_map(
+        compat.shard_map(
             body, mesh=mesh, in_specs=P("data", None), out_specs=P()
         )
     )

@@ -2,7 +2,10 @@
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st, assume, HealthCheck
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st, assume, HealthCheck  # noqa: E402
 
 from repro.core import MIScore, mrmr_reference, mi_from_counts
 

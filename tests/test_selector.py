@@ -1,0 +1,185 @@
+"""MRMRSelector front-door API: planning heuristic, engine agreement,
+transform semantics, engine registry."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import (
+    CustomScore,
+    MIScore,
+    MRMRSelector,
+    PearsonMIScore,
+    plan_selection,
+)
+from repro.core import mrmr_reference
+from repro.core.mrmr import MRMRResult
+from repro.core.selector import available_encodings, register_engine, get_engine
+from repro.data.synthetic import corral_dataset
+from repro.dist import make_mesh
+
+
+class TestPlanSelection:
+    def test_tall_narrow_conventional(self):
+        plan = plan_selection((100_000, 100), 8)
+        assert plan.encoding == "conventional"
+        assert plan.mesh_shape == (8,)
+        assert plan.obs_axes and not plan.feat_axes
+
+    def test_wide_short_alternative(self):
+        plan = plan_selection((200, 50_000), 8)
+        assert plan.encoding == "alternative"
+        assert plan.mesh_shape == (8,)
+        assert plan.feat_axes and not plan.obs_axes
+
+    def test_square_large_grid(self):
+        plan = plan_selection((4096, 4096), 8)
+        assert plan.encoding == "grid"
+        assert plan.obs_axes and plan.feat_axes
+        assert int(np.prod(plan.mesh_shape)) == 8
+
+    def test_single_device_never_grid(self):
+        plan = plan_selection((4096, 4096), 1)
+        assert plan.encoding in ("conventional", "alternative")
+        assert plan.mesh_shape == ()
+
+    def test_non_mi_score_forces_alternative(self):
+        plan = plan_selection((100_000, 100), 8, PearsonMIScore())
+        assert plan.encoding == "alternative"
+        custom = CustomScore(get_result=lambda v, c, s, n: jnp.float32(0))
+        assert plan_selection((4096, 4096), 8, custom).encoding == "alternative"
+
+    def test_mesh_constrains_planning(self):
+        mesh = make_mesh((1,), ("data",))
+        plan = plan_selection((200, 50_000), mesh)
+        # wide data wants the alternative encoding, but the mesh has no
+        # feature axis -> fall back to the observation-sharded job
+        assert plan.encoding == "conventional"
+        assert plan.obs_axes == ("data",)
+
+    def test_non_mi_score_never_routed_to_mi_engine(self):
+        # A non-MI score on a mesh without a feature axis must fall back
+        # to the score-agnostic reference engine, not the MI-only
+        # conventional one.
+        mesh = make_mesh((1,), ("data",))
+        plan = plan_selection((256, 16), mesh, PearsonMIScore())
+        assert plan.encoding == "reference"
+
+
+@pytest.fixture(scope="module")
+def corral():
+    X, y = corral_dataset(2000, 32, seed=1, flip_prob=0.02)
+    return np.asarray(X, np.int32), np.asarray(y)
+
+
+@pytest.fixture(scope="module")
+def corral_ref(corral):
+    X, y = corral
+    score = MIScore(num_values=2, num_classes=2)
+    res = mrmr_reference(jnp.asarray(X.T), jnp.asarray(y), 5, score)
+    return np.asarray(res.selected), np.asarray(res.gains)
+
+
+class TestEngineAgreement:
+    @pytest.mark.parametrize("encoding", ["reference", "conventional",
+                                          "alternative"])
+    def test_matches_reference(self, corral, corral_ref, encoding):
+        X, y = corral
+        sel = MRMRSelector(num_select=5, encoding=encoding).fit(X, y)
+        np.testing.assert_array_equal(sel.selected_, corral_ref[0])
+        assert sel.plan_.encoding == encoding
+
+    def test_grid_matches_reference(self, corral, corral_ref):
+        X, y = corral
+        mesh = make_mesh((1, 1), ("data", "model"))
+        sel = MRMRSelector(num_select=5, encoding="grid", mesh=mesh).fit(X, y)
+        np.testing.assert_array_equal(sel.selected_, corral_ref[0])
+        np.testing.assert_allclose(sel.gains_, corral_ref[1],
+                                   rtol=1e-4, atol=1e-5)
+
+    def test_auto_plan_matches_reference(self, corral, corral_ref):
+        X, y = corral
+        sel = MRMRSelector(num_select=5).fit(X, y)
+        assert sel.plan_ is not None
+        np.testing.assert_array_equal(sel.selected_, corral_ref[0])
+
+    def test_non_divisible_shapes_padded(self, corral, corral_ref):
+        # 23 features / 2000 rows don't divide a (1,1) grid's padded walk —
+        # exercise the pad/unpad ownership with ragged shapes.
+        X, y = corral
+        Xr, L = X[:, :23], 4
+        score = MIScore(num_values=2, num_classes=2)
+        want = np.asarray(
+            mrmr_reference(jnp.asarray(Xr.T), jnp.asarray(y), L, score).selected
+        )
+        for encoding, mesh in [
+            ("conventional", None),
+            ("alternative", None),
+            ("grid", make_mesh((1, 1), ("data", "model"))),
+        ]:
+            sel = MRMRSelector(num_select=L, encoding=encoding,
+                               mesh=mesh).fit(Xr, y)
+            np.testing.assert_array_equal(sel.selected_, want)
+
+
+class TestContinuousTargets:
+    def test_pearson_keeps_continuous_y(self):
+        # Regression: fit() must not truncate a continuous target to int
+        # for non-MI scores (Pearson relevance collapses if it does).
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(256, 16)).astype(np.float32)
+        y = 0.9 * X[:, 3] + 0.1 * rng.normal(size=256)  # y in R, not classes
+        sel = MRMRSelector(num_select=2, score=PearsonMIScore()).fit(X, y)
+        assert sel.selected_[0] == 3
+        assert sel.gains_[0] > 0.5  # int-truncated y would give ~0 MI
+
+
+class TestTransform:
+    def test_columns_in_selection_order(self, corral):
+        X, y = corral
+        sel = MRMRSelector(num_select=5).fit(X, y)
+        Xt = sel.transform(X)
+        assert Xt.shape == (X.shape[0], 5)
+        for rank, feat in enumerate(sel.selected_):
+            np.testing.assert_array_equal(Xt[:, rank], X[:, feat])
+
+    def test_fit_transform(self, corral):
+        X, y = corral
+        a = MRMRSelector(num_select=3).fit_transform(X, y)
+        b = MRMRSelector(num_select=3).fit(X, y).transform(X)
+        np.testing.assert_array_equal(a, b)
+
+    def test_transform_before_fit_raises(self):
+        with pytest.raises(RuntimeError):
+            MRMRSelector(num_select=2).transform(np.zeros((4, 4)))
+
+
+class TestRegistry:
+    def test_builtin_engines_registered(self):
+        assert set(available_encodings()) >= {
+            "reference", "conventional", "alternative", "grid",
+        }
+
+    def test_unknown_encoding_raises(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="unknown encoding"):
+            MRMRSelector(num_select=2, encoding="mapreduce").fit(X, y)
+
+    def test_custom_engine_dispatch(self, corral):
+        X, y = corral
+
+        @register_engine("_test_stub")
+        def stub(X, y, *, num_select, plan, mesh):
+            return MRMRResult(
+                selected=jnp.arange(num_select, dtype=jnp.int32),
+                gains=jnp.zeros((num_select,), jnp.float32),
+            )
+
+        try:
+            sel = MRMRSelector(num_select=3, encoding="_test_stub").fit(X, y)
+            np.testing.assert_array_equal(sel.selected_, [0, 1, 2])
+            assert get_engine("_test_stub") is stub
+        finally:
+            from repro.core import selector as selector_mod
+
+            selector_mod._ENGINES.pop("_test_stub", None)
