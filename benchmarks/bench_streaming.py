@@ -1,0 +1,113 @@
+"""Streaming vs in-memory fit: throughput + peak-memory estimate (dry-run).
+
+Generates the paper's CorrAL-style dataset straight to a memmapped
+``.npy`` (never materialising it on the host), fits once in-memory and
+once per ``--block-obs`` value through the streaming engine, verifies the
+selections agree, and records wall time, scoring-pass throughput and the
+peak *input* bytes resident on device — ``M·N`` for in-memory vs
+``block_obs·N`` + statistics for streaming, the block-size/memory
+trade-off in one table.
+
+    PYTHONPATH=src python benchmarks/bench_streaming.py --rows 200000 \
+        --cols 256 --select 10 --block-obs 16384,65536 \
+        --out BENCH_streaming.json
+
+The committed ``BENCH_streaming.json`` at the repo root is the baseline
+(default sizes above) that later PRs compare their perf trajectory to.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import numpy as np
+
+from repro import MIScore, MRMRSelector
+from repro.data.sources import CorralSource, NpySource
+
+
+def _fit_record(mode: str, args, fit_fn, peak_input_bytes: int) -> dict:
+    t0 = time.time()
+    sel = fit_fn()
+    dt = time.time() - t0
+    # Both engines run L scoring passes (1 relevance + L-1/L redundancy);
+    # rows/s is nominal pass throughput over the whole selection.
+    passes = args.select
+    return dict(
+        mode=mode,
+        rows=args.rows,
+        cols=args.cols,
+        select=args.select,
+        seconds=round(dt, 3),
+        rows_per_s=round(args.rows * passes / dt),
+        peak_input_bytes=int(peak_input_bytes),
+        selected=sel.selected_.tolist(),
+    )
+
+
+def main(argv=None) -> list:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rows", type=int, default=200_000)
+    ap.add_argument("--cols", type=int, default=256)
+    ap.add_argument("--select", type=int, default=10)
+    ap.add_argument("--block-obs", default="16384,65536",
+                    help="comma-separated streaming block sizes")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None, help="write records to this JSON")
+    args = ap.parse_args(argv)
+
+    score = MIScore(num_values=2, num_classes=2)
+    blocks = [int(b) for b in args.block_obs.split(",")]
+    state_bytes = args.cols * 2 * 2 * 4  # (N, d_v, d_c) f32 statistics
+
+    with tempfile.TemporaryDirectory() as tmp:
+        src = CorralSource(args.rows, args.cols, seed=args.seed)
+        x_path, y_path = src.to_npy(
+            os.path.join(tmp, "X.npy"), os.path.join(tmp, "y.npy")
+        )
+        npy = NpySource(x_path, y_path)
+
+        X, y = npy.materialize()
+        records = [
+            _fit_record(
+                "in_memory", args,
+                lambda: MRMRSelector(num_select=args.select,
+                                     score=score).fit(X, y),
+                X.nbytes,
+            )
+        ]
+        base = records[0]["selected"]
+        for bo in blocks:
+            rec = _fit_record(
+                f"streaming@{bo}", args,
+                lambda bo=bo: MRMRSelector(
+                    num_select=args.select, score=score, block_obs=bo
+                ).fit(NpySource(x_path, y_path)),
+                bo * args.cols * X.dtype.itemsize + state_bytes,
+            )
+            rec["block_obs"] = bo
+            if rec["selected"] != base:
+                raise SystemExit(
+                    f"streaming@{bo} diverged: {rec['selected']} != {base}"
+                )
+            records.append(rec)
+
+    for r in records:
+        print(
+            f"{r['mode']:<18s} {r['seconds']:8.2f}s "
+            f"{r['rows_per_s']:>12,d} rows/s "
+            f"peak_input={r['peak_input_bytes'] / 1e6:8.1f} MB"
+        )
+    if args.out:
+        os.makedirs(os.path.dirname(os.path.abspath(args.out)), exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump(records, f, indent=1)
+    return records
+
+
+if __name__ == "__main__":
+    main()

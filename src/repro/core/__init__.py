@@ -32,3 +32,7 @@ from repro.core.selector import (  # noqa: F401
     register_engine,
 )
 from repro.core.selection import FeatureSelector, infer_layout, mrmr_select  # noqa: F401
+
+# Imported last: registers the "streaming" engine against the registry in
+# repro.core.selector (the out-of-core DataSource fit path).
+from repro.core.streaming import mrmr_streaming  # noqa: F401

@@ -21,7 +21,7 @@ with the paper's exact Listing-7 signature.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Literal, Union
 
 import jax
 import jax.numpy as jnp
@@ -102,15 +102,57 @@ class ScoreFn:
     """Base interface. ``incremental_safe`` (a class attribute, NOT a
     dataclass field) marks scores of the mRMR additive form, for which the
     driver may carry a running redundancy sum (the beyond-paper O(N·L)
-    optimisation) instead of recomputing it (paper baseline)."""
+    optimisation) instead of recomputing it (paper baseline).
+
+    Scores that can be computed from *block-wise sufficient statistics* set
+    ``supports_streaming`` and implement the three streaming primitives:
+
+      * ``init_state(n_features, target_kind)`` — zeroed statistics pytree
+        for scoring every feature against one target column (``"class"``
+        or ``"feature"``; MI uses it to size the contingency tables).
+      * ``accumulate(state, X_block, target, valid=None)`` — fold one
+        observation-block ``(B, N)`` + target column ``(B,)`` into the
+        statistics.  ``valid`` masks padded rows (the streaming engine pads
+        every block to a fixed size for one compiled accumulate step).
+      * ``finalize(state)`` — reduce statistics to ``(N,)`` scores.
+
+    This is the paper's mapper/combiner/reducer factored onto the score
+    object: ``accumulate`` is map+combine over a partition, the engine's
+    state-carrying loop (or the mesh all-reduce) is the reducer, and
+    ``finalize`` is the score evaluation on the reduced statistics.
+    """
 
     incremental_safe: bool = True
+    supports_streaming: bool = False
 
     def relevance(self, cands: Array, cls: Array) -> Array:  # (F, M),(M,)->(F,)
         raise NotImplementedError
 
     def redundancy(self, cands: Array, other: Array) -> Array:  # ->(F,)
         raise NotImplementedError
+
+    # -- streaming sufficient statistics --------------------------------
+
+    def init_state(self, n_features: int, target_kind: str = "class"):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support streaming fits"
+        )
+
+    def accumulate(self, state, X_block: Array, target: Array, valid=None):
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support streaming fits"
+        )
+
+    def finalize(self, state) -> Array:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support streaming fits"
+        )
+
+
+# Out-of-range category sentinel: its one-hot row is all-zero, so masked
+# observations contribute nothing to a contingency table.  Plain int, not a
+# jnp constant (import-time jnp values would initialise the XLA backend).
+_OOR = 2**31 - 1
 
 
 @dataclasses.dataclass(frozen=True)
@@ -120,25 +162,39 @@ class MIScore(ScoreFn):
     ``num_values`` (``d_v``) / ``num_classes`` (``d_c``) follow the paper:
     the union of categorical values over all features, and over the class.
     ``use_pallas="auto"`` routes the contingency/MI hot loop through the
-    Pallas kernels on TPU and the jnp path elsewhere.
+    Pallas kernels on TPU and the jnp path elsewhere; ``True`` forces the
+    kernels (interpreted off-TPU), ``False`` forces the blocked jnp oracle.
     """
 
     num_values: int = 2
     num_classes: int = 2
     block: int = 64
-    use_pallas: object = "auto"
+    use_pallas: Union[bool, Literal["auto"]] = "auto"
 
-    def _counts(self, cands: Array, tgt: Array, vy: int) -> Array:
+    supports_streaming = True
+
+    def __post_init__(self):
+        if self.use_pallas not in (True, False, "auto"):
+            raise ValueError(
+                "use_pallas must be True, False or 'auto'; "
+                f"got {self.use_pallas!r}"
+            )
+
+    def _tables(self, X_cols: Array, tgt: Array, vy: int) -> Array:
+        """(M, F) column-layout contingency tables against one target."""
+        if self.use_pallas is False:
+            return contingency.batched_counts(
+                X_cols, tgt, self.num_values, vy, block=self.block
+            )
         from repro.kernels import ops  # lazy: avoids core<->kernels cycle
 
-        if self.use_pallas != False:  # noqa: E712  ("auto" or True)
-            return ops.contingency_tables(
-                cands.T, tgt, self.num_values, vy, use_pallas=self.use_pallas
-            )
-        # feature-major candidates -> (M, F) column layout for batched_counts.
-        return contingency.batched_counts(
-            cands.T, tgt, self.num_values, vy, block=self.block
+        return ops.contingency_tables(
+            X_cols, tgt, self.num_values, vy, use_pallas=self.use_pallas
         )
+
+    def _counts(self, cands: Array, tgt: Array, vy: int) -> Array:
+        # feature-major candidates -> (M, F) column layout for the kernels.
+        return self._tables(cands.T, tgt, vy)
 
     def relevance(self, cands: Array, cls: Array) -> Array:
         return mi_from_counts(self._counts(cands, cls, self.num_classes))
@@ -146,19 +202,98 @@ class MIScore(ScoreFn):
     def redundancy(self, cands: Array, other: Array) -> Array:
         return mi_from_counts(self._counts(cands, other, self.num_values))
 
+    # -- streaming: per-pair contingency tables, summed block-by-block ----
+
+    def init_state(self, n_features: int, target_kind: str = "class") -> Array:
+        # int32 running counts: the per-block f32 tables are exact (block
+        # counts < 2^24), but a float running sum would silently saturate
+        # past 2^24 rows per cell — the very regime streaming exists for.
+        # int32 is exact to ~2.1B observations per cell.
+        vy = self.num_classes if target_kind == "class" else self.num_values
+        return jnp.zeros((n_features, self.num_values, vy), jnp.int32)
+
+    def accumulate(
+        self, state: Array, X_block: Array, target: Array, valid=None
+    ) -> Array:
+        tgt = target.astype(jnp.int32)
+        if valid is not None:
+            # An out-of-range target zeroes the whole one-hot product, so
+            # padded rows vanish from the counts without touching X.
+            tgt = jnp.where(valid, tgt, _OOR)
+        tables = self._tables(X_block, tgt, state.shape[-1])
+        return state + tables.astype(jnp.int32)
+
+    def finalize(self, state: Array) -> Array:
+        return mi_from_counts(state)
+
 
 @dataclasses.dataclass(frozen=True)
 class PearsonMIScore(ScoreFn):
     """Listing-8 score: MI approximated via Pearson correlation.
 
     Works for continuous data (alternative encoding only, as in the paper).
+    Streams as running moments — sum, sum-of-squares and cross-products —
+    so one block-wise pass recovers the exact full-dataset correlation.
     """
+
+    supports_streaming = True
 
     def relevance(self, cands: Array, cls: Array) -> Array:
         return cor2mi(pearson_rows(cands, cls.astype(jnp.float32)))
 
     def redundancy(self, cands: Array, other: Array) -> Array:
         return cor2mi(pearson_rows(cands, other.astype(jnp.float32)))
+
+    # -- streaming: running moments -------------------------------------
+
+    def init_state(self, n_features: int, target_kind: str = "class") -> dict:
+        z = jnp.zeros((n_features,), jnp.float32)
+        s = jnp.zeros((), jnp.float32)
+        # mu_x / mu_t: per-column shifts frozen from the first block.  The
+        # moments are accumulated on SHIFTED data — cov/var are
+        # shift-invariant, but naive uncentered f32 sums cancel
+        # catastrophically when |mean| >> std (sxx ~ n·mu² swamps the
+        # signal), so the shift keeps the sums near the origin.
+        return dict(n=s, mu_x=z, mu_t=s, sx=z, sxx=z, sxt=z, st=s, stt=s)
+
+    def accumulate(
+        self, state: dict, X_block: Array, target: Array, valid=None
+    ) -> dict:
+        X = X_block.astype(jnp.float32)
+        t = target.astype(jnp.float32)
+        if valid is not None:
+            w = valid.astype(jnp.float32)
+            n = w.sum()
+        else:
+            w = jnp.ones((X.shape[0],), jnp.float32)
+            n = jnp.float32(X.shape[0])
+        denom = jnp.maximum(n, 1.0)
+        first = state["n"] == 0
+        mu_x = jnp.where(first, (X * w[:, None]).sum(axis=0) / denom,
+                         state["mu_x"])
+        mu_t = jnp.where(first, (t * w).sum() / denom, state["mu_t"])
+        # Shift, then zero padded rows: they drop out of every sum and only
+        # n carries the true observation count.
+        Xs = (X - mu_x) * w[:, None]
+        ts = (t - mu_t) * w
+        return dict(
+            n=state["n"] + n,
+            mu_x=mu_x,
+            mu_t=mu_t,
+            sx=state["sx"] + Xs.sum(axis=0),
+            sxx=state["sxx"] + (Xs * Xs).sum(axis=0),
+            sxt=state["sxt"] + (Xs * ts[:, None]).sum(axis=0),
+            st=state["st"] + ts.sum(),
+            stt=state["stt"] + (ts * ts).sum(),
+        )
+
+    def finalize(self, state: dict) -> Array:
+        n = jnp.maximum(state["n"], 1.0)
+        cov = state["sxt"] - state["sx"] * state["st"] / n
+        var_x = state["sxx"] - state["sx"] * state["sx"] / n
+        var_t = state["stt"] - state["st"] * state["st"] / n
+        corr = cov / jnp.sqrt(jnp.maximum(var_x * var_t, _EPS))
+        return cor2mi(jnp.clip(corr, -1.0, 1.0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -168,11 +303,20 @@ class CustomScore(ScoreFn):
     ``get_result(variable (M,), class (M,), selected (L, M), n_selected)``
     must return the *complete* feature score for one candidate.  Because an
     arbitrary user score need not decompose into relevance/redundancy, this
-    forces the paper-faithful (recompute-every-iteration) driver path.
+    forces the paper-faithful (recompute-every-iteration) driver path, and
+    it cannot stream (no sufficient-statistics decomposition to accumulate).
     """
 
-    get_result: Callable[[Array, Array, Array, Array], Array] = None
+    get_result: Callable[[Array, Array, Array, Array], Array]
     incremental_safe = False
+
+    def __post_init__(self):
+        # Fail here, not as an opaque TypeError deep inside the driver's vmap.
+        if not callable(self.get_result):
+            raise TypeError(
+                "CustomScore requires a callable get_result(variable, cls, "
+                f"selected, n_selected); got {self.get_result!r}"
+            )
 
     def full_score(
         self, cands: Array, cls: Array, selected: Array, n_selected: Array

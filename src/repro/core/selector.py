@@ -37,7 +37,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mrmr as mrmr_mod
 from repro.core.mrmr import MRMRResult
-from repro.core.scores import MIScore, PearsonMIScore, ScoreFn
+from repro.core.scores import MIScore, PearsonMIScore, ScoreFn, _OOR
+from repro.data.sources import ArraySource, DataSource
 from repro.dist.meshes import factor_mesh, make_mesh
 from repro.dist.sharding import axes_tuple as _axes_tuple, mesh_extent
 
@@ -61,7 +62,7 @@ class SelectionPlan:
     (discrete -> exact MI, continuous -> Pearson-MI).
     """
 
-    encoding: str                     # reference|conventional|alternative|grid
+    encoding: str                     # reference|conventional|alternative|grid|streaming
     obs_axes: tuple = ()              # mesh axes sharding observations
     feat_axes: tuple = ()             # mesh axes sharding features
     mesh_shape: tuple = ()            # extents, aligned with mesh_axes
@@ -70,6 +71,7 @@ class SelectionPlan:
     score: ScoreFn | None = None      # score spec (None = auto from data)
     onehot_dtype: str = "bfloat16"    # contingency one-hot storage dtype
     static_inner: bool = False        # fixed-trip recompute loop (dry-run)
+    block_obs: int = 65536            # streaming: observations per block
 
     @property
     def mesh_axes(self) -> tuple:
@@ -282,7 +284,8 @@ def _place(x: Array, mesh: Mesh | None, spec: P) -> Array:
     return jax.device_put(x, NamedSharding(mesh, spec))
 
 
-_OOR = np.iinfo(np.int32).max  # out-of-range category: zero one-hot row
+# _OOR (imported from scores): out-of-range category -> zero one-hot row,
+# the one padding sentinel shared by the in-memory and streaming paths.
 
 
 @register_engine("reference")
@@ -354,6 +357,14 @@ class MRMRSelector:
     encoding only changes how the work is distributed, never the input
     orientation.
 
+    Out-of-core data fits through the same front door: pass a
+    :class:`repro.data.sources.DataSource` as the sole argument —
+    ``fit(NpySource("X.npy", "y.npy"))`` — and the ``"streaming"`` engine
+    runs the selection block-by-block with peak device memory bounded by
+    ``block_obs`` rows instead of ``num_obs`` (the streaming engine always
+    uses the running-sum redundancy formulation; selections are identical
+    to the recompute baseline for the built-in scores).
+
     Args:
       num_select: L, number of features to pick.
       score: a ``ScoreFn``; None resolves from the data (discrete -> exact
@@ -369,6 +380,9 @@ class MRMRSelector:
       incremental: False reproduces the paper's per-iteration redundancy
         recomputation; True keeps a running sum (identical selections).
       block: contingency feature-block size.
+      block_obs: observations per streaming block (``DataSource`` fits) —
+        the peak-device-memory knob; larger blocks amortise dispatch and
+        host-to-device transfer, smaller blocks cap memory.
     """
 
     num_select: int
@@ -380,6 +394,7 @@ class MRMRSelector:
     feat_axes: Sequence[str] | str = ("model",)
     incremental: bool = True
     block: int = 64
+    block_obs: int = 65536
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
@@ -459,8 +474,89 @@ class MRMRSelector:
         devices = self.devices if not isinstance(self.devices, int) else None
         return make_mesh(plan.mesh_shape, plan.mesh_axes, devices=devices)
 
-    def fit(self, X, y) -> "MRMRSelector":
-        """X: (observations, features); y: (observations,) targets."""
+    def _resolve_source_score(self, source: DataSource) -> ScoreFn:
+        if self.score is not None:
+            return self.score
+        st = source.stats(self.block_obs)  # scan honours the memory knob
+        if st.discrete:
+            return MIScore(num_values=st.num_values, num_classes=st.num_classes)
+        return PearsonMIScore()
+
+    def _resolve_stream_plan(self, score: ScoreFn) -> SelectionPlan:
+        obs = _axes_tuple(self.obs_axes)
+        if self.mesh is not None:
+            obs = tuple(a for a in obs if a in self.mesh.shape)
+            if not obs:
+                # Silently running unsharded on a user-supplied mesh would
+                # betray the device budget; streaming has no fallback
+                # engine to reroute to, so fail loudly.
+                raise ValueError(
+                    f"mesh axes {tuple(self.mesh.shape)} share no axis with "
+                    f"obs_axes {_axes_tuple(self.obs_axes)}; streaming "
+                    "shards blocks over observation axes only"
+                )
+            shape = tuple(self.mesh.shape[a] for a in obs)
+        else:
+            n_dev = _device_count(self.devices)
+            if n_dev <= 1:
+                obs, shape = (), ()
+            else:
+                obs = obs[:1] or ("data",)
+                shape = (n_dev,)
+        # Streaming always uses the running-sum redundancy: the recompute
+        # baseline would multiply the number of passes over the data by L.
+        return SelectionPlan(
+            encoding="streaming", obs_axes=obs, mesh_shape=shape,
+            block=self.block, block_obs=self.block_obs, incremental=True,
+            score=score,
+        )
+
+    def _fit_source(self, source: DataSource) -> "MRMRSelector":
+        if self.encoding not in ("auto", "streaming"):
+            raise ValueError(
+                f"encoding {self.encoding!r} needs in-memory arrays; "
+                "DataSource inputs run the 'streaming' engine "
+                "(materialise the source yourself to force another engine)"
+            )
+        if not 0 < self.num_select <= source.num_features:
+            raise ValueError(
+                f"num_select={self.num_select} out of range for "
+                f"{source.num_features} features"
+            )
+        score = self._resolve_source_score(source)
+        plan = self._resolve_stream_plan(score)
+        mesh = self._resolve_mesh(plan)
+        engine = get_engine("streaming")
+        res = engine(source, None, num_select=self.num_select, plan=plan,
+                     mesh=mesh)
+        self.selected_ = np.asarray(res.selected)
+        self.gains_ = np.asarray(res.gains)
+        self.plan_ = plan
+        self.mesh_ = mesh
+        return self
+
+    def fit(self, X, y=None) -> "MRMRSelector":
+        """X: (observations, features) array + y: (observations,) targets,
+        or a ``DataSource`` alone (targets come from its blocks)."""
+        if (
+            not isinstance(X, DataSource)
+            and self.encoding == "streaming"
+            and y is not None
+        ):
+            # Arrays through the streaming engine: wrap in the adapter so
+            # one code path owns the block walk.
+            X, y = ArraySource(X, y), None
+        if isinstance(X, DataSource):
+            if y is not None:
+                raise ValueError(
+                    "y comes from the DataSource; call fit(source) alone"
+                )
+            return self._fit_source(X)
+        if y is None:
+            raise ValueError(
+                "y is required for array inputs (only DataSource fits "
+                "carry their own targets)"
+            )
         X = jnp.asarray(X)
         y = jnp.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
@@ -487,12 +583,20 @@ class MRMRSelector:
         return self
 
     def transform(self, X):
-        """Selected columns of ``X``, ordered by selection rank."""
+        """Selected columns of ``X``, ordered by selection rank.
+
+        Accepts a ``DataSource`` too: blocks stream through and only the
+        ``(num_obs, num_select)`` result materialises."""
         if self.selected_ is None:
             raise RuntimeError("fit() first")
+        if isinstance(X, DataSource):
+            return np.concatenate(
+                [blk[:, self.selected_]
+                 for blk, _ in X.iter_blocks(self.block_obs)]
+            )
         return np.asarray(X)[:, self.selected_]
 
-    def fit_transform(self, X, y):
+    def fit_transform(self, X, y=None):
         return self.fit(X, y).transform(X)
 
 

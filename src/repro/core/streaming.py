@@ -1,0 +1,117 @@
+"""Streaming mRMR — the paper's MapReduce fit over out-of-core data.
+
+This is the data regime the paper actually targets: a dataset too large to
+hold in device memory, visited as observation-blocks.  Each scoring pass
+is one MapReduce job in the paper's conventional encoding — ``map`` =
+per-block sufficient statistics (contingency tables for MI, running
+moments for Pearson), ``combine`` = the block-level batched einsum,
+``reduce`` = the state-carrying sum across blocks (plus the mesh
+all-reduce when blocks are sharded).  The greedy loop is host-driven:
+
+    pass 0:        relevance statistics vs the class   -> rel (N,)
+    pick l, then:  statistics of ALL features vs the just-selected column
+                   (read from the same blocks, no column cache) -> red += …
+
+Total I/O is ``L`` passes over the source (1 relevance + L-1 redundancy,
+the running-sum formulation — selections identical to the paper's
+recompute, as with the in-memory engines) while peak device memory is
+``O(block_obs × N)`` for the block plus ``O(N · d_v · d_c)`` statistics,
+independent of ``num_obs``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.mrmr import MRMRResult
+from repro.core.scores import ScoreFn
+from repro.core.selector import register_engine
+from repro.data.sources import DataSource, as_source
+from repro.dist.streaming import BlockPlacer
+
+_NEG_INF = float("-inf")
+
+
+def _score_pass(
+    source: DataSource,
+    score: ScoreFn,
+    acc_fn,
+    placer: BlockPlacer,
+    target_col: int | None,
+) -> np.ndarray:
+    """One full map-reduce pass: (N,) scores of every feature against the
+    class (``target_col=None``) or against feature column ``target_col``."""
+    kind = "class" if target_col is None else "feature"
+    state = score.init_state(source.num_features, kind)
+    for X_blk, y_blk in source.iter_blocks(placer.block_obs):
+        tgt = y_blk if target_col is None else X_blk[:, target_col]
+        state = acc_fn(state, *placer(X_blk, tgt))
+    return np.asarray(score.finalize(state), np.float32)
+
+
+def mrmr_streaming(
+    source,
+    num_select: int,
+    score: ScoreFn,
+    *,
+    block_obs: int = 65536,
+    mesh: Mesh | None = None,
+    obs_axes=("data",),
+) -> MRMRResult:
+    """Greedy mRMR over a :class:`~repro.data.sources.DataSource`.
+
+    Args:
+      source: a ``DataSource`` (or an ``(X, y)`` pair to wrap).
+      num_select: L, number of features to pick.
+      score: a streaming-capable ``ScoreFn`` (``supports_streaming``).
+      block_obs: observations per device block — the peak-memory knob
+        (rounded up to the mesh's observation extent).
+      mesh / obs_axes: shard each block over these axes; statistics reduce
+        with one all-reduce per block, the paper's reducer on the ICI ring.
+    """
+    source = as_source(*source) if isinstance(source, tuple) else as_source(source)
+    if not score.supports_streaming:
+        raise ValueError(
+            f"{type(score).__name__} cannot stream: it has no "
+            "sufficient-statistics decomposition (init_state/accumulate/"
+            "finalize). Materialise the data and use an in-memory engine."
+        )
+    n = source.num_features
+    if not 0 < num_select <= n:
+        raise ValueError(f"num_select={num_select} out of range for {n} features")
+
+    placer = BlockPlacer(block_obs, mesh, obs_axes)
+    acc_fn = jax.jit(score.accumulate)
+
+    rel = _score_pass(source, score, acc_fn, placer, None)
+    mask = np.zeros((n,), bool)
+    red_sum = np.zeros((n,), np.float32)
+    selected = np.full((num_select,), -1, np.int32)
+    gains = np.zeros((num_select,), np.float32)
+    for l in range(num_select):
+        # f32 host math mirrors the device drivers, so argmax ties resolve
+        # identically to the in-memory engines (toward the lowest id).
+        g = rel - red_sum / np.float32(max(l, 1))
+        g[mask] = _NEG_INF
+        k = int(np.argmax(g))
+        selected[l], gains[l] = k, g[k]
+        mask[k] = True
+        if l + 1 < num_select:
+            red_sum = red_sum + _score_pass(source, score, acc_fn, placer, k)
+    return MRMRResult(selected=jnp.asarray(selected), gains=jnp.asarray(gains))
+
+
+@register_engine("streaming")
+def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
+    del y  # targets come from the source's blocks
+    return mrmr_streaming(
+        source,
+        num_select,
+        plan.score,
+        block_obs=plan.block_obs,
+        mesh=mesh,
+        obs_axes=plan.obs_axes,
+    )

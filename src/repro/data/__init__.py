@@ -1,2 +1,12 @@
 from repro.data.synthetic import corral_dataset, lm_token_batches  # noqa: F401
 from repro.data.pipeline import ShardedDataPipeline  # noqa: F401
+from repro.data.sources import (  # noqa: F401
+    ArraySource,
+    CSVSource,
+    CorralSource,
+    DataSource,
+    NpySource,
+    SourceStats,
+    SyntheticTokenSource,
+    as_source,
+)

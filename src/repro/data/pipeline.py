@@ -1,34 +1,44 @@
 """Sharded, deterministic, resumable data pipeline.
 
-Fault-tolerance by construction: batches are a pure function of
-``(seed, step)`` (step-indexed PRNG), so a restart from checkpoint step k
-replays the identical stream with no data-loader state to persist.  Each
-host materialises only its addressable shard of the global batch
-(`jax.make_array_from_callback`), so the pipeline scales to any mesh.
+This is the *placement* half of the data layer: block generation lives in
+``repro.data.sources`` (the same host-blocks protocol the selection
+engines stream from) and this module lands those blocks on a mesh.  The
+pipeline consumes any step-indexed source — an object with
+``block(step, lo, hi) -> np.ndarray`` that is a pure function of
+``(seed, step)`` — and materialises, per host, only the addressable shard
+of the global batch (``jax.make_array_from_callback``).
+
+Fault-tolerance by construction: because the source is step-indexed, a
+restart from checkpoint step k replays the identical stream with no
+data-loader state to persist, and the pipeline scales to any mesh.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.data.sources import SyntheticTokenSource
 
 Array = jax.Array
 
 
 @dataclasses.dataclass
 class ShardedDataPipeline:
-    """Synthetic-token pipeline sharded over the batch axis.
+    """Token pipeline sharded over the batch axis.
 
     Args:
       mesh: device mesh; batches are sharded P(batch_axes, None).
       global_batch: global batch size (divisible by the batch-axes extent).
       seq_len, vocab: token geometry.
       seed: stream seed. ``batch_at(step)`` is pure in (seed, step).
+      source: step-indexed block source; None builds the default
+        :class:`~repro.data.sources.SyntheticTokenSource` from the fields
+        above.  Any object with a pure ``block(step, lo, hi)`` works —
+        swapping the source swaps the dataset, never the placement.
     """
 
     mesh: Mesh
@@ -37,6 +47,7 @@ class ShardedDataPipeline:
     vocab: int
     seed: int = 0
     batch_axes: tuple = ("pod", "data")
+    source: object = None
 
     def __post_init__(self):
         axes = tuple(a for a in self.batch_axes if a in self.mesh.shape)
@@ -49,14 +60,15 @@ class ShardedDataPipeline:
                 f"global_batch {self.global_batch} not divisible by "
                 f"batch-axes extent {ext}"
             )
+        if self.source is None:
+            self.source = SyntheticTokenSource(
+                self.global_batch, self.seq_len, self.vocab, self.seed
+            )
         self._sharding = NamedSharding(self.mesh, P(self.batch_axes, None))
 
     def _host_block(self, step: int, lo: int, hi: int) -> np.ndarray:
         """Rows [lo, hi) of the global batch at ``step`` (host-side numpy)."""
-        rng = np.random.default_rng((self.seed, step))
-        # Advance cheaply to the row block: regenerate only needed rows.
-        u = rng.random((self.global_batch, self.seq_len + 1))[lo:hi]
-        return (u * u * self.vocab).astype(np.int32)
+        return self.source.block(step, lo, hi)
 
     def batch_at(self, step: int) -> dict:
         """Global sharded batch at ``step``: tokens/targets (B, S) int32."""
@@ -70,9 +82,7 @@ class ShardedDataPipeline:
             cols = index[1]
             return block[:, cols]
 
-        full = jax.make_array_from_callback(
-            shape, NamedSharding(self.mesh, P(self.batch_axes, None)), cb
-        )
+        full = jax.make_array_from_callback(shape, self._sharding, cb)
         return {
             "tokens": jax.lax.slice_in_dim(full, 0, self.seq_len, axis=1),
             "targets": jax.lax.slice_in_dim(full, 1, self.seq_len + 1, axis=1),

@@ -1,0 +1,371 @@
+"""Out-of-core dataset ingestion — the ``DataSource`` protocol.
+
+The paper's premise is a dataset too big for one node: MapReduce workers
+each see a *partition*, emit sufficient statistics, and the reducer sums
+them.  ``DataSource`` is that partition interface for this repo: a source
+knows its global geometry (``num_obs`` × ``num_features``) and yields
+observation-blocks — host-side numpy arrays ``(X_block (B, N), y_block
+(B,))`` in conventional orientation with ``B <= block_obs`` — whose
+concatenation is the full dataset, in a deterministic order that does not
+depend on the requested block size.
+
+Everything that can feed a fit is a source: in-memory arrays
+(:class:`ArraySource`), memmapped ``.npy`` files (:class:`NpySource`),
+CSV files (:class:`CSVSource`) and the paper's synthetic generator
+(:class:`CorralSource`).  The streaming engine
+(``repro.core.streaming``) consumes blocks and accumulates per-score
+sufficient statistics, so peak device memory is bounded by the block
+size, never by ``num_obs``.
+
+This module is deliberately numpy-only: importing it never initialises a
+jax backend, so launchers can still set ``XLA_FLAGS`` after import.
+
+The LM side of the repo speaks the same block language through
+:class:`SyntheticTokenSource` — a *step-indexed* source (an infinite
+stream pure in ``(seed, step)``) that ``repro.data.pipeline`` places onto
+a mesh; finite selection sources and infinite token sources are the two
+faces of one host-blocks protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import io
+from typing import Iterator, Tuple
+
+import numpy as np
+
+Block = Tuple[np.ndarray, np.ndarray]
+
+# Internal generation granularity of synthetic sources: fixed, so the
+# emitted dataset is identical for every requested block_obs.
+_GEN_CHUNK = 8192
+
+
+@dataclasses.dataclass(frozen=True)
+class SourceStats:
+    """Streaming-scan metadata used to auto-resolve a score function."""
+
+    discrete: bool      # X and y both integral -> exact-MI territory
+    num_values: int     # d_v: 1 + max feature category (0 if continuous)
+    num_classes: int    # d_c: 1 + max class label (0 if continuous)
+
+
+def _rechunked(chunks: Iterator[Block], block_obs: int) -> Iterator[Block]:
+    """Re-slice an (X, y) chunk stream into blocks of exactly ``block_obs``
+    rows (the final block may be ragged).  Chunk boundaries of the producer
+    never leak into the consumer's block boundaries."""
+    pend_x, pend_y, have = [], [], 0
+    for X, y in chunks:
+        pend_x.append(X)
+        pend_y.append(y)
+        have += X.shape[0]
+        if have >= block_obs:
+            # Concatenate once per producer chunk, then slice every full
+            # block out as views — linear total copying, however small the
+            # requested blocks are relative to the producer's chunks.
+            Xc, yc = np.concatenate(pend_x), np.concatenate(pend_y)
+            lo = 0
+            while have - lo >= block_obs:
+                yield Xc[lo : lo + block_obs], yc[lo : lo + block_obs]
+                lo += block_obs
+            pend_x, pend_y = [Xc[lo:]], [yc[lo:]]
+            have -= lo
+    if have:
+        yield np.concatenate(pend_x), np.concatenate(pend_y)
+
+
+class DataSource:
+    """Base class: geometry + deterministic observation-block iteration."""
+
+    @property
+    def num_obs(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def num_features(self) -> int:
+        raise NotImplementedError
+
+    def iter_blocks(self, block_obs: int) -> Iterator[Block]:
+        """Yield ``(X (B, N), y (B,))`` numpy blocks, ``B <= block_obs``,
+        concatenating to the full dataset in a block-size-independent order."""
+        raise NotImplementedError
+
+    # -- derived conveniences -------------------------------------------
+
+    def stats(self, block_obs: int = 65536) -> SourceStats:
+        """One streaming pass of metadata (cached): dtype regime + the
+        paper's ``d_v`` / ``d_c`` category counts."""
+        cached = getattr(self, "_stats", None)
+        if cached is not None:
+            return cached
+        x_max = y_max = 0
+        discrete = True
+        for X, y in self.iter_blocks(block_obs):
+            discrete = discrete and (
+                np.issubdtype(X.dtype, np.integer) or X.dtype == np.bool_
+            ) and (np.issubdtype(y.dtype, np.integer) or y.dtype == np.bool_)
+            if not discrete:
+                break  # dtype settles it; don't burn a full pass of I/O
+            x_max = max(x_max, int(X.max(initial=0)))
+            y_max = max(y_max, int(y.max(initial=0)))
+        st = SourceStats(
+            discrete=discrete,
+            num_values=x_max + 1 if discrete else 0,
+            num_classes=y_max + 1 if discrete else 0,
+        )
+        object.__setattr__(self, "_stats", st)  # works on frozen dataclasses
+        return st
+
+    def materialize(self, block_obs: int = 65536) -> Block:
+        """Concatenate every block — small datasets and tests only."""
+        xs, ys = zip(*self.iter_blocks(block_obs))
+        return np.concatenate(xs), np.concatenate(ys)
+
+    def to_npy(
+        self, x_path: str, y_path: str, block_obs: int = 65536
+    ) -> tuple[str, str]:
+        """Stream the source into ``.npy`` files (block-wise via memmap, no
+        full-dataset host allocation) — ready for :class:`NpySource`."""
+        first = next(iter(self.iter_blocks(1)))  # dtype peek, one row
+        Xm = np.lib.format.open_memmap(
+            x_path, mode="w+", dtype=first[0].dtype,
+            shape=(self.num_obs, self.num_features),
+        )
+        ym = np.lib.format.open_memmap(
+            y_path, mode="w+", dtype=first[1].dtype, shape=(self.num_obs,)
+        )
+        lo = 0
+        for X, y in self.iter_blocks(block_obs):
+            Xm[lo : lo + X.shape[0]] = X
+            ym[lo : lo + X.shape[0]] = y
+            lo += X.shape[0]
+        Xm.flush()
+        ym.flush()
+        return x_path, y_path
+
+
+def as_source(X, y=None) -> DataSource:
+    """Coerce ``fit`` inputs to a source: pass sources through, wrap arrays."""
+    if isinstance(X, DataSource):
+        if y is not None:
+            raise ValueError("y comes from the DataSource; pass the source alone")
+        return X
+    if y is None:
+        raise ValueError("array inputs need a target: as_source(X, y)")
+    return ArraySource(X, y)
+
+
+class ArraySource(DataSource):
+    """In-memory (or memmapped) arrays as a source — the fast-path adapter."""
+
+    def __init__(self, X, y):
+        # asanyarray keeps memmaps memmapped (no eager load) while copying
+        # device arrays to host exactly once.
+        self.X = np.asanyarray(X)
+        self.y = np.asanyarray(y)
+        if self.X.ndim != 2 or self.y.shape[:1] != self.X.shape[:1]:
+            raise ValueError(f"bad shapes X{self.X.shape} y{self.y.shape}")
+
+    @property
+    def num_obs(self) -> int:
+        return self.X.shape[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.X.shape[1]
+
+    def iter_blocks(self, block_obs: int) -> Iterator[Block]:
+        for lo in range(0, self.num_obs, block_obs):
+            hi = min(lo + block_obs, self.num_obs)
+            # np.array forces a real copy: yielded blocks are contiguous
+            # and independent of the backing store, so consumers that
+            # retain them never pin a memmapped file.
+            yield np.array(self.X[lo:hi]), np.array(self.y[lo:hi])
+
+
+class NpySource(ArraySource):
+    """Memmapped ``.npy`` feature matrix + target vector.
+
+    The file is never loaded whole: ``np.load(mmap_mode="r")`` maps it and
+    ``iter_blocks`` copies one observation-block at a time, so datasets far
+    larger than device (or host) memory stream through a fit.
+    """
+
+    def __init__(self, x_path: str, y_path: str, *, mmap: bool = True):
+        mode = "r" if mmap else None
+        super().__init__(
+            np.load(x_path, mmap_mode=mode), np.load(y_path, mmap_mode=mode)
+        )
+        self.x_path, self.y_path = x_path, y_path
+
+
+class CSVSource(DataSource):
+    """Streaming CSV reader: parses ``block_obs`` lines at a time.
+
+    Args:
+      path: CSV file; a non-numeric first line is treated as a header.
+      target_col: column index of the target (default: last column).
+      dtype: feature dtype (use an integer dtype for discrete/MI data).
+      target_dtype: target dtype (default: ``dtype``).
+      delimiter: field separator.
+    """
+
+    def __init__(
+        self,
+        path: str,
+        *,
+        target_col: int = -1,
+        dtype=np.float32,
+        target_dtype=None,
+        delimiter: str = ",",
+    ):
+        self.path = path
+        self.target_col = target_col
+        self.dtype = np.dtype(dtype)
+        self.target_dtype = np.dtype(target_dtype or dtype)
+        self.delimiter = delimiter
+        with open(path) as f:
+            first = f.readline()
+        if not first:
+            raise ValueError(f"empty CSV {path!r}")
+        fields = first.strip().split(delimiter)
+        self._has_header = not _all_numeric(fields)
+        self._num_cols = len(fields)
+        self._num_obs: int | None = None
+
+    @property
+    def num_obs(self) -> int:
+        if self._num_obs is None:  # one cheap line-count pass, cached
+            with open(self.path) as f:
+                n = sum(1 for line in f if line.strip())
+            self._num_obs = n - int(self._has_header)
+        return self._num_obs
+
+    @property
+    def num_features(self) -> int:
+        return self._num_cols - 1
+
+    def _parse(self, lines: list) -> Block:
+        tgt = self.target_col % self._num_cols
+        keep = [c for c in range(self._num_cols) if c != tgt]
+        rows = np.loadtxt(
+            io.StringIO("".join(lines)),
+            delimiter=self.delimiter,
+            ndmin=2,
+            dtype=np.float64,
+        )
+        return rows[:, keep].astype(self.dtype), rows[:, tgt].astype(
+            self.target_dtype
+        )
+
+    def iter_blocks(self, block_obs: int) -> Iterator[Block]:
+        with open(self.path) as f:
+            if self._has_header:
+                f.readline()
+            lines: list = []
+            # Count only non-blank lines toward the block, so blank runs of
+            # any length never truncate the stream.
+            for line in f:
+                if not line.strip():
+                    continue
+                lines.append(line)
+                if len(lines) == block_obs:
+                    yield self._parse(lines)
+                    lines = []
+            if lines:
+                yield self._parse(lines)
+
+
+def _all_numeric(fields) -> bool:
+    try:
+        [float(v) for v in fields]
+        return True
+    except ValueError:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class CorralSource(DataSource):
+    """The paper's §V CorrAL-style generator as a streaming source (Eq. 3).
+
+    Rows are generated in fixed internal chunks, each seeded by
+    ``(seed, chunk_index)``, so the dataset is a pure function of
+    ``(seed, num_obs, num_cols)`` — identical for every ``block_obs`` and
+    never materialised whole.  Column layout matches
+    ``repro.data.synthetic.corral_dataset``: 0..7 relevant (Eq. 3), 8
+    partially class-correlated (75% agreement), the rest iid noise;
+    ``flip_prob`` injects label noise.
+    """
+
+    num_rows: int
+    num_cols: int
+    seed: int = 0
+    flip_prob: float = 0.05
+
+    def __post_init__(self):
+        if self.num_cols < 9:
+            raise ValueError("CorralSource needs at least 9 columns")
+
+    @property
+    def num_obs(self) -> int:
+        return self.num_rows
+
+    @property
+    def num_features(self) -> int:
+        return self.num_cols
+
+    def _chunk(self, ci: int) -> Block:
+        rows = min(_GEN_CHUNK, self.num_rows - ci * _GEN_CHUNK)
+        rng = np.random.default_rng((self.seed, ci))
+        blk = rng.integers(0, 2, size=(rows, self.num_cols), dtype=np.int8)
+        x = [blk[:, i].astype(bool) for i in range(8)]
+        c = ((x[0] & x[1]) | (x[2] & x[3])) & ((x[4] & x[5]) | (x[6] & x[7]))
+        agree = rng.random(rows) < 0.75
+        blk[:, 8] = np.where(agree, c, ~c)
+        if self.flip_prob > 0:
+            flips = rng.random(rows) < self.flip_prob
+            c = np.where(flips, ~c, c)
+        return blk, c.astype(np.int8)
+
+    def iter_blocks(self, block_obs: int) -> Iterator[Block]:
+        nchunks = -(-self.num_rows // _GEN_CHUNK)
+        yield from _rechunked(
+            (self._chunk(ci) for ci in range(nchunks)), block_obs
+        )
+
+
+# ---------------------------------------------------------------------------
+# step-indexed token sources (the LM-pipeline face of the protocol)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SyntheticTokenSource:
+    """Infinite step-indexed token stream, pure in ``(seed, step)``.
+
+    ``block(step, lo, hi)`` returns rows [lo, hi) of the global batch at
+    ``step`` — the restart-replay property ``ShardedDataPipeline`` builds
+    its fault tolerance on (same Zipf-ish marginal as
+    ``synthetic.lm_token_batches``)."""
+
+    global_batch: int
+    seq_len: int
+    vocab: int
+    seed: int = 0
+
+    def block(self, step: int, lo: int, hi: int) -> np.ndarray:
+        rng = np.random.default_rng((self.seed, step))
+        u = rng.random((self.global_batch, self.seq_len + 1))[lo:hi]
+        return (u * u * self.vocab).astype(np.int32)
+
+
+__all__ = [
+    "ArraySource",
+    "CSVSource",
+    "CorralSource",
+    "DataSource",
+    "NpySource",
+    "SourceStats",
+    "SyntheticTokenSource",
+    "as_source",
+]

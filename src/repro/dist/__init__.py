@@ -12,10 +12,13 @@ repo (drivers, models, launchers) never talks to raw jax device state:
   ``logical_to_spec`` resolves them to ``PartitionSpec`` with divisibility
   and axis-reuse guards.
 * ``repro.dist.pipeline`` — GPipe pipeline parallelism over a mesh axis.
+* ``repro.dist.streaming`` — ``BlockPlacer``: pad-and-shard placement of
+  streamed observation-blocks for the out-of-core fit path.
 """
 
 from repro.dist.compat import pvary, shard_map  # noqa: F401
 from repro.dist.meshes import make_mesh  # noqa: F401
+from repro.dist.streaming import BlockPlacer  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401
     ShardingRules,
     axes_tuple,

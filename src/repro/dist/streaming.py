@@ -1,0 +1,84 @@
+"""Observation-block placement for the streaming engine.
+
+The streaming fit path moves host blocks onto devices one at a time; this
+module owns that placement the same way ``repro.core.selector`` owns it
+for in-memory fits.  ``BlockPlacer`` pads every incoming block to one
+fixed row count (so the engine's accumulate step compiles exactly once)
+and, given a mesh, lands the block sharded over the observation axes —
+each device holds ``block_obs / extent`` rows and XLA partitions the
+statistics accumulation data-parallel, reducing with the same all-reduce
+the in-memory conventional engine uses.  Padded rows are reported through
+a ``valid`` mask; what a score does with it (out-of-range categories,
+zero-weighted moments) is the score's business.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist.sharding import axes_tuple, mesh_extent
+
+
+@dataclasses.dataclass
+class BlockPlacer:
+    """Pad-and-place for observation blocks.
+
+    Args:
+      block_obs: requested rows per block; rounded UP to a multiple of the
+        observation-axes extent so every shard gets equal rows.
+      mesh: device mesh, or None for single-device placement.
+      obs_axes: mesh axes to shard observations over (intersected with the
+        mesh's axes).
+    """
+
+    block_obs: int
+    mesh: Mesh | None = None
+    obs_axes: tuple = ()
+
+    def __post_init__(self):
+        axes = axes_tuple(self.obs_axes)
+        if self.mesh is not None:
+            axes = tuple(a for a in axes if a in self.mesh.shape)
+            if not axes:
+                # A mesh the blocks can't shard over would silently run
+                # single-device against the caller's device budget — guard
+                # here so the direct engine API fails like the selector.
+                raise ValueError(
+                    f"mesh axes {tuple(self.mesh.shape)} share no axis "
+                    f"with obs_axes {axes_tuple(self.obs_axes)}"
+                )
+        self.obs_axes = axes
+        ext = mesh_extent(self.mesh, axes)
+        self.block_obs = -(-int(self.block_obs) // ext) * ext
+        if self.mesh is not None and axes:
+            self._shard_mat = NamedSharding(self.mesh, P(axes, None))
+            self._shard_vec = NamedSharding(self.mesh, P(axes))
+        else:
+            self._shard_mat = self._shard_vec = None
+
+    def __call__(self, X_block: np.ndarray, target: np.ndarray):
+        """(B, N), (B,) host block -> placed (X, target, valid), B' fixed."""
+        b = X_block.shape[0]
+        if b > self.block_obs:
+            raise ValueError(
+                f"block of {b} rows exceeds block_obs={self.block_obs}"
+            )
+        if b < self.block_obs:
+            pad = self.block_obs - b
+            X_block = np.concatenate(
+                [X_block, np.zeros((pad,) + X_block.shape[1:], X_block.dtype)]
+            )
+            target = np.concatenate([target, np.zeros((pad,), target.dtype)])
+        valid = np.arange(self.block_obs) < b
+        if self._shard_mat is not None:
+            return (
+                jax.device_put(X_block, self._shard_mat),
+                jax.device_put(target, self._shard_vec),
+                jax.device_put(valid, self._shard_vec),
+            )
+        return jnp.asarray(X_block), jnp.asarray(target), jnp.asarray(valid)

@@ -7,14 +7,22 @@
     PYTHONPATH=src REPRO_DEVICES=8 python -m repro.launch.select \
         --encoding grid --mesh-obs 4 --mesh-feat 2
 
-Input: ``--input data.npz`` with arrays ``X`` (rows=observations) and ``y``,
-or the paper's CorrAL-style synthetic generator by default.  The whole
-distribution strategy goes through :class:`repro.MRMRSelector`: encoding
-``auto`` applies the paper's §III aspect-ratio rule, explicit encodings
-shard over whatever devices jax exposes, and ``grid`` places a 2-D
-(observation × feature) mesh — shape from ``--mesh-obs``/``--mesh-feat`` or
-auto-factored.  ``REPRO_DEVICES=N`` forces N simulated host devices (set
-before jax initialises).
+    # Out-of-core: stream a memmapped .npy that never fits in device
+    # memory, 65536 observations per block:
+    PYTHONPATH=src python -m repro.launch.select \
+        --input data.npy --target target.npy --block-obs 65536
+
+Inputs: ``--input data.npz`` (arrays ``X`` rows=observations, ``y``) loads
+in-memory; ``--input data.npy`` (+ ``--target target.npy``) memmaps and
+streams block-by-block through the ``streaming`` engine; ``--input
+data.csv`` streams a CSV (target = last column); default is the paper's
+CorrAL-style synthetic generator.  The whole distribution strategy goes
+through :class:`repro.MRMRSelector`: encoding ``auto`` applies the paper's
+§III aspect-ratio rule (streamed sources always run the streaming engine),
+explicit encodings shard over whatever devices jax exposes, and ``grid``
+places a 2-D (observation × feature) mesh — shape from
+``--mesh-obs``/``--mesh-feat`` or auto-factored.  ``REPRO_DEVICES=N``
+forces N simulated host devices (set before jax initialises).
 """
 
 from __future__ import annotations
@@ -37,13 +45,36 @@ import numpy as np
 
 from repro.core.scores import MIScore, PearsonMIScore
 from repro.core.selector import MRMRSelector, available_encodings
+from repro.data.sources import CSVSource, NpySource
 from repro.data.synthetic import corral_dataset_np
 from repro.dist.meshes import make_mesh
 
 
+def _load_input(args):
+    """-> (X, y, source): arrays for in-memory fits OR a DataSource."""
+    path = args.input
+    if path is None:
+        X, y = corral_dataset_np(args.rows, args.cols, seed=args.seed)
+        return X, y, None
+    if path.endswith(".npz"):
+        data = np.load(path)
+        return data["X"], data["y"], None
+    if path.endswith(".npy"):
+        if not args.target:
+            raise SystemExit("--target <y.npy> is required with a .npy input")
+        return None, None, NpySource(path, args.target)
+    if path.endswith(".csv"):
+        dtype = np.int32 if args.score == "mi" else np.float32
+        return None, None, CSVSource(path, dtype=dtype)
+    raise SystemExit(f"unsupported --input {path!r} (.npz, .npy or .csv)")
+
+
 def main(argv=None) -> dict:
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--input", default=None, help="npz with X (M,N), y (M,)")
+    ap.add_argument("--input", default=None,
+                    help=".npz with X,y | .npy matrix (see --target) | .csv")
+    ap.add_argument("--target", default=None,
+                    help="target-vector .npy for a .npy --input")
     ap.add_argument("--rows", type=int, default=100_000)
     ap.add_argument("--cols", type=int, default=1000)
     ap.add_argument("--select", type=int, default=10)
@@ -58,21 +89,20 @@ def main(argv=None) -> dict:
     ap.add_argument("--num-classes", type=int, default=2)
     ap.add_argument("--incremental", type=int, default=1)
     ap.add_argument("--block", type=int, default=64)
+    ap.add_argument("--block-obs", type=int, default=65536,
+                    help="observations per streamed block (DataSource inputs)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
-    if args.input:
-        data = np.load(args.input)
-        X, y = data["X"], data["y"]
-    else:
-        X, y = corral_dataset_np(args.rows, args.cols, seed=args.seed)
+    X, y, source = _load_input(args)
 
     if args.score == "mi":
         score = MIScore(num_values=args.num_values,
                         num_classes=args.num_classes)
     else:
         score = PearsonMIScore()
-        X = X.astype(np.float32)
+        if X is not None:
+            X = X.astype(np.float32)
 
     mesh = None
     if args.mesh_obs or args.mesh_feat:
@@ -85,7 +115,9 @@ def main(argv=None) -> dict:
     sel = MRMRSelector(
         num_select=args.select, score=score, encoding=args.encoding,
         mesh=mesh, incremental=bool(args.incremental), block=args.block,
-    ).fit(X, y)
+        block_obs=args.block_obs,
+    )
+    sel = sel.fit(source) if source is not None else sel.fit(X, y)
     plan = sel.plan_
     out = {
         "encoding": plan.encoding,
@@ -96,6 +128,8 @@ def main(argv=None) -> dict:
         "gains": [round(float(g), 5) for g in sel.gains_],
         "seconds": round(time.time() - t0, 3),
     }
+    if plan.encoding == "streaming":
+        out["block_obs"] = plan.block_obs
     print(json.dumps(out))
     return out
 

@@ -139,6 +139,42 @@ class TestScoreObjects:
         want = [np_mi(np_pair_counts(X[i], y, 3, 2)) for i in range(9)]
         np.testing.assert_allclose(rel, want, rtol=1e-4, atol=1e-6)
 
+    def test_mi_use_pallas_validated_at_construction(self):
+        for ok in (True, False, "auto"):
+            assert scores.MIScore(use_pallas=ok).use_pallas == ok
+        with pytest.raises(ValueError, match="use_pallas"):
+            scores.MIScore(use_pallas="bogus")
+        with pytest.raises(ValueError, match="use_pallas"):
+            scores.MIScore(use_pallas=None)
+
+    def test_mi_use_pallas_false_uses_jnp_path(self):
+        # Explicit False must route through the blocked jnp oracle and
+        # still agree with the default dispatch path.
+        rng = np.random.default_rng(8)
+        X = rng.integers(0, 2, (6, 200))
+        y = rng.integers(0, 2, 200)
+        a = scores.MIScore(2, 2, use_pallas=False).relevance(
+            jnp.asarray(X), jnp.asarray(y)
+        )
+        b = scores.MIScore(2, 2).relevance(jnp.asarray(X), jnp.asarray(y))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+    def test_custom_score_requires_callable(self):
+        with pytest.raises(TypeError):
+            scores.CustomScore()  # missing argument fails at construction
+        with pytest.raises(TypeError, match="callable"):
+            scores.CustomScore(get_result=None)
+        with pytest.raises(TypeError, match="callable"):
+            scores.CustomScore(get_result=42)
+
+    def test_streaming_support_flags(self):
+        assert scores.MIScore().supports_streaming
+        assert scores.PearsonMIScore().supports_streaming
+        custom = scores.CustomScore(get_result=lambda v, c, s, n: 0.0)
+        assert not custom.supports_streaming
+        with pytest.raises(NotImplementedError, match="streaming"):
+            custom.init_state(4)
+
     def test_custom_score_equals_builtin_mrmr(self):
         rng = np.random.default_rng(7)
         X = rng.integers(0, 2, (8, 120))

@@ -1,0 +1,308 @@
+"""DataSource protocol + streaming engine: block-size invariance of
+sources, streaming-vs-in-memory selection equivalence (the out-of-core
+acceptance bar), placement, and the front-door API guards."""
+
+import numpy as np
+import jax
+import pytest
+
+from repro import CustomScore, MIScore, MRMRSelector, PearsonMIScore
+from repro.core.streaming import mrmr_streaming
+from repro.data.sources import (
+    ArraySource,
+    CSVSource,
+    CorralSource,
+    NpySource,
+    SyntheticTokenSource,
+    as_source,
+)
+from repro.dist import BlockPlacer, make_mesh
+
+
+@pytest.fixture(scope="module")
+def corral():
+    X, y = CorralSource(1500, 24, seed=3).materialize()
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def corral_selected(corral):
+    X, y = corral
+    sel = MRMRSelector(num_select=5, score=MIScore(2, 2)).fit(X, y)
+    return sel.selected_, sel.gains_
+
+
+class TestSources:
+    @pytest.mark.parametrize("block_obs", [1, 7, 100, 1500, 4096])
+    def test_array_source_blocks_concatenate(self, corral, block_obs):
+        X, y = corral
+        src = ArraySource(X, y)
+        assert (src.num_obs, src.num_features) == X.shape
+        blocks = list(src.iter_blocks(block_obs))
+        assert all(b[0].shape[0] <= block_obs for b in blocks)
+        np.testing.assert_array_equal(np.concatenate([b[0] for b in blocks]), X)
+        np.testing.assert_array_equal(np.concatenate([b[1] for b in blocks]), y)
+
+    def test_corral_block_size_invariance(self):
+        # The generated dataset must be a pure function of (seed, shape),
+        # independent of how it is blocked — including sizes that straddle
+        # the internal generation-chunk boundary.
+        src = CorralSource(10_000, 16, seed=7)
+        a = src.materialize(block_obs=613)
+        b = src.materialize(block_obs=8192)
+        c = src.materialize(block_obs=10_000)
+        np.testing.assert_array_equal(a[0], b[0])
+        np.testing.assert_array_equal(a[1], b[1])
+        np.testing.assert_array_equal(a[0], c[0])
+
+    def test_npy_source_memmap_roundtrip(self, tmp_path, corral):
+        X, y = corral
+        src = CorralSource(1500, 24, seed=3)
+        xp, yp = src.to_npy(str(tmp_path / "X.npy"), str(tmp_path / "y.npy"),
+                            block_obs=600)
+        npy = NpySource(xp, yp)
+        # The backing array must stay a memmap, not a loaded copy.
+        assert isinstance(npy.X, np.memmap)
+        Xr, yr = npy.materialize(block_obs=333)
+        np.testing.assert_array_equal(Xr, X)
+        np.testing.assert_array_equal(yr, y)
+
+    def test_csv_source(self, tmp_path):
+        rng = np.random.default_rng(0)
+        X = rng.integers(0, 3, size=(57, 4))
+        y = rng.integers(0, 2, size=57)
+        path = tmp_path / "data.csv"
+        header = "f0,f1,f2,f3,target\n"
+        rows = "\n".join(
+            ",".join(map(str, list(xr) + [yi])) for xr, yi in zip(X, y)
+        )
+        path.write_text(header + rows + "\n")
+        src = CSVSource(str(path), dtype=np.int32)
+        assert src.num_obs == 57 and src.num_features == 4
+        Xr, yr = src.materialize(block_obs=13)
+        np.testing.assert_array_equal(Xr, X)
+        np.testing.assert_array_equal(yr, y)
+
+    def test_csv_blank_runs_do_not_truncate(self, tmp_path):
+        # A run of blank lines longer than the block must not read as EOF.
+        X = np.arange(40).reshape(20, 2)
+        y = np.arange(20)
+        body = []
+        for xr, yi in zip(X, y):
+            body.append(",".join(map(str, list(xr) + [yi])))
+            if yi == 9:
+                body.extend([""] * 8)  # blank run wider than block_obs=5
+        path = tmp_path / "gaps.csv"
+        path.write_text("\n".join(body) + "\n")
+        src = CSVSource(str(path), dtype=np.int32)
+        Xr, yr = src.materialize(block_obs=5)
+        np.testing.assert_array_equal(Xr, X)
+        np.testing.assert_array_equal(yr, y)
+
+    def test_stats_discrete(self, corral):
+        X, y = corral
+        st = ArraySource(X, y).stats(block_obs=256)
+        assert st.discrete and st.num_values == 2 and st.num_classes == 2
+        st2 = ArraySource(X.astype(np.float32), y).stats()
+        assert not st2.discrete
+
+    def test_as_source_guards(self, corral):
+        X, y = corral
+        src = ArraySource(X, y)
+        assert as_source(src) is src
+        with pytest.raises(ValueError, match="alone"):
+            as_source(src, y)
+        with pytest.raises(ValueError, match="target"):
+            as_source(X)
+
+    def test_token_source_is_step_pure(self):
+        src = SyntheticTokenSource(32, 8, 100, seed=1)
+        full = src.block(3, 0, 32)
+        assert full.shape == (32, 9) and full.dtype == np.int32
+        np.testing.assert_array_equal(src.block(3, 10, 20), full[10:20])
+
+
+class TestStreamingEquivalence:
+    # 999 does not divide 1500; 4096 exceeds it — both must still match.
+    @pytest.mark.parametrize("block_obs", [128, 999, 4096])
+    def test_mi_matches_in_memory(self, corral, corral_selected, block_obs):
+        X, y = corral
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), block_obs=block_obs
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+        np.testing.assert_allclose(sel.gains_, corral_selected[1],
+                                   rtol=1e-4, atol=1e-5)
+        assert sel.plan_.encoding == "streaming"
+
+    @pytest.mark.parametrize("block_obs", [100, 257, 2048])
+    def test_pearson_matches_in_memory(self, block_obs):
+        from repro.data.synthetic import continuous_wide_dataset
+
+        X, y = continuous_wide_dataset(1024, 32, seed=2)
+        X, y = np.asarray(X), np.asarray(y)
+        want = MRMRSelector(num_select=5, score=PearsonMIScore()).fit(X, y)
+        got = MRMRSelector(
+            num_select=5, score=PearsonMIScore(), block_obs=block_obs
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_allclose(got.gains_, want.gains_,
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_pearson_large_mean_no_cancellation(self):
+        # Uncentered f32 moments cancel catastrophically when |mean| >> std
+        # (sxx ~ n·mu^2 swamps the signal); the shifted accumulation must
+        # keep streaming selections identical to in-memory ones.
+        rng = np.random.default_rng(9)
+        X = (1e4 + rng.normal(size=(50_000, 12))).astype(np.float32)
+        y = (0.5 * X[:, 3] + 0.3 * X[:, 7]
+             + rng.normal(size=50_000)).astype(np.float32)
+        want = MRMRSelector(num_select=4, score=PearsonMIScore()).fit(X, y)
+        got = MRMRSelector(
+            num_select=4, score=PearsonMIScore(), block_obs=8192
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_allclose(got.gains_, want.gains_,
+                                   rtol=5e-2, atol=1e-3)
+
+    def test_npy_memmap_end_to_end(self, tmp_path, corral_selected):
+        # The acceptance bar: a memmapped on-disk dataset streamed in
+        # blocks far smaller than the data selects identical features.
+        src = CorralSource(1500, 24, seed=3)
+        xp, yp = src.to_npy(str(tmp_path / "X.npy"), str(tmp_path / "y.npy"))
+        sel = MRMRSelector(num_select=5, block_obs=256).fit(NpySource(xp, yp))
+        np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+        assert sel.plan_.encoding == "streaming"
+        assert sel.plan_.block_obs == 256
+        # auto score resolution came from the source's streaming scan
+        assert isinstance(sel.plan_.score, MIScore)
+
+    def test_streaming_on_mesh(self, corral, corral_selected):
+        X, y = corral
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("data",))
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=200
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+        # block_obs is rounded up to the mesh extent by the placer
+        assert sel.mesh_ is mesh
+
+    def test_arrays_with_streaming_encoding(self, corral, corral_selected):
+        X, y = corral
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), encoding="streaming",
+            block_obs=512,
+        ).fit(X, y)
+        np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+        assert sel.plan_.encoding == "streaming"
+
+    def test_transform_from_source(self, corral):
+        X, y = corral
+        sel = MRMRSelector(num_select=4, block_obs=300).fit(ArraySource(X, y))
+        Xt = sel.transform(ArraySource(X, y))
+        np.testing.assert_array_equal(Xt, X[:, sel.selected_])
+
+    def test_fit_transform_from_source_alone(self, corral):
+        X, y = corral
+        Xt = MRMRSelector(num_select=3, block_obs=300).fit_transform(
+            ArraySource(X, y)
+        )
+        assert Xt.shape == (X.shape[0], 3)
+
+    def test_driver_function_direct(self, corral, corral_selected):
+        X, y = corral
+        res = mrmr_streaming((X, y), 5, MIScore(2, 2), block_obs=500)
+        np.testing.assert_array_equal(np.asarray(res.selected),
+                                      corral_selected[0])
+
+
+class TestStreamingPrimitives:
+    def test_mi_accumulate_equals_batch(self, corral):
+        import jax.numpy as jnp
+
+        X, y = corral
+        score = MIScore(2, 2)
+        state = score.init_state(X.shape[1], "class")
+        state = score.accumulate(state, jnp.asarray(X[:700]), jnp.asarray(y[:700]))
+        state = score.accumulate(state, jnp.asarray(X[700:]), jnp.asarray(y[700:]))
+        got = np.asarray(score.finalize(state))
+        want = np.asarray(score.relevance(jnp.asarray(X.T), jnp.asarray(y)))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+    def test_pearson_valid_mask_drops_padding(self):
+        import jax.numpy as jnp
+
+        rng = np.random.default_rng(5)
+        X = rng.normal(size=(64, 6)).astype(np.float32)
+        t = rng.normal(size=64).astype(np.float32)
+        score = PearsonMIScore()
+        full = score.accumulate(score.init_state(6), jnp.asarray(X),
+                                jnp.asarray(t))
+        Xp = np.concatenate([X, np.full((16, 6), 1e6, np.float32)])
+        tp = np.concatenate([t, np.full((16,), -1e6, np.float32)])
+        valid = np.arange(80) < 64
+        masked = score.accumulate(
+            score.init_state(6), jnp.asarray(Xp), jnp.asarray(tp),
+            jnp.asarray(valid),
+        )
+        np.testing.assert_allclose(
+            np.asarray(score.finalize(masked)),
+            np.asarray(score.finalize(full)), rtol=1e-5, atol=1e-6,
+        )
+
+    def test_block_placer_rounds_up_to_mesh(self):
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("data",))
+        placer = BlockPlacer(100, mesh, ("data",))
+        assert placer.block_obs % n_dev == 0
+        X, t, valid = placer(np.zeros((37, 3), np.int8), np.zeros(37, np.int8))
+        assert X.shape[0] == placer.block_obs
+        assert int(np.asarray(valid).sum()) == 37
+
+    def test_block_placer_rejects_oversized(self):
+        placer = BlockPlacer(16)
+        with pytest.raises(ValueError, match="exceeds"):
+            placer(np.zeros((17, 2), np.int8), np.zeros(17, np.int8))
+
+    def test_block_placer_rejects_axisless_mesh(self):
+        mesh = make_mesh((1,), ("model",))
+        with pytest.raises(ValueError, match="no axis"):
+            BlockPlacer(16, mesh, ("data",))
+
+
+class TestFrontDoorGuards:
+    def test_y_with_source_raises(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="alone"):
+            MRMRSelector(num_select=2).fit(ArraySource(X, y), y)
+
+    def test_missing_y_raises(self, corral):
+        X, _ = corral
+        with pytest.raises(ValueError, match="required"):
+            MRMRSelector(num_select=2).fit(X)
+
+    def test_in_memory_encoding_rejects_source(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="in-memory"):
+            MRMRSelector(num_select=2, encoding="grid").fit(ArraySource(X, y))
+
+    def test_custom_score_cannot_stream(self, corral):
+        X, y = corral
+        score = CustomScore(get_result=lambda v, c, s, n: 0.0)
+        with pytest.raises(ValueError, match="stream"):
+            MRMRSelector(num_select=2, score=score).fit(ArraySource(X, y))
+
+    def test_num_select_out_of_range(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="out of range"):
+            MRMRSelector(num_select=99).fit(ArraySource(X, y))
+
+    def test_mesh_without_obs_axis_raises(self, corral):
+        # A user-supplied mesh the streaming engine can't shard over must
+        # fail loudly, not silently run single-device.
+        X, y = corral
+        mesh = make_mesh((1,), ("model",))
+        with pytest.raises(ValueError, match="obs_axes"):
+            MRMRSelector(num_select=2, score=MIScore(2, 2),
+                         mesh=mesh).fit(ArraySource(X, y))
