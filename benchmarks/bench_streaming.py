@@ -2,14 +2,17 @@
 
 Generates the paper's CorrAL-style dataset straight to a memmapped
 ``.npy`` (never materialising it on the host), fits once in-memory and
-once per ``--block-obs`` value through the streaming engine, verifies the
-selections agree, and records wall time, scoring-pass throughput and the
-peak *input* bytes resident on device — ``M·N`` for in-memory vs
-``block_obs·N`` + statistics for streaming, the block-size/memory
-trade-off in one table.
+once per ``(--block-obs, --prefetch)`` cell through the streaming engine,
+verifies the selections agree, and records wall time, scoring-pass
+throughput and the peak *input* bytes resident on device — ``M·N`` for
+in-memory vs ``block_obs·N`` + statistics for streaming.  ``--prefetch
+0,2`` turns the same table into a synchronous-vs-double-buffered placer
+comparison.  A second **wide** dataset (``--wide-rows``/``--wide-cols``,
+``m/n <= 0.25`` — the regime where feature-sharded statistics matter)
+runs the same grid against the in-memory alternative engine.
 
     PYTHONPATH=src python benchmarks/bench_streaming.py --rows 200000 \
-        --cols 256 --select 10 --block-obs 16384,65536 \
+        --cols 256 --select 10 --block-obs 16384,65536 --prefetch 0,2 \
         --out BENCH_streaming.json
 
 The committed ``BENCH_streaming.json`` at the repo root is the baseline
@@ -30,23 +33,79 @@ from repro import MIScore, MRMRSelector
 from repro.data.sources import CorralSource, NpySource
 
 
-def _fit_record(mode: str, args, fit_fn, peak_input_bytes: int) -> dict:
-    t0 = time.time()
-    sel = fit_fn()
-    dt = time.time() - t0
+def _fit_record(
+    mode: str, rows: int, cols: int, select: int, fit_fn,
+    peak_input_bytes: int, repeats: int = 1,
+) -> dict:
+    # min over repeats: the shared CI/container boxes these run on are
+    # noisy, and the minimum is the least-contended (most comparable)
+    # observation of each cell.
+    dt = float("inf")
+    for _ in range(repeats):
+        t0 = time.time()
+        sel = fit_fn()
+        dt = min(dt, time.time() - t0)
     # Both engines run L scoring passes (1 relevance + L-1/L redundancy);
     # rows/s is nominal pass throughput over the whole selection.
-    passes = args.select
     return dict(
         mode=mode,
-        rows=args.rows,
-        cols=args.cols,
-        select=args.select,
+        rows=rows,
+        cols=cols,
+        select=select,
         seconds=round(dt, 3),
-        rows_per_s=round(args.rows * passes / dt),
+        rows_per_s=round(rows * select / dt),
         peak_input_bytes=int(peak_input_bytes),
+        repeats=repeats,
         selected=sel.selected_.tolist(),
     )
+
+
+def _bench_dataset(
+    tag: str, rows: int, cols: int, select: int, blocks, prefetches,
+    seed: int, tmp: str, repeats: int,
+) -> list:
+    """In-memory baseline + the (block_obs × prefetch) streaming grid for
+    one dataset; every streaming cell must reproduce the baseline."""
+    score = MIScore(num_values=2, num_classes=2)
+    state_bytes = cols * 2 * 2 * 4  # (N, d_v, d_c) statistics
+    src = CorralSource(rows, cols, seed=seed)
+    x_path, y_path = src.to_npy(
+        os.path.join(tmp, f"{tag}X.npy"), os.path.join(tmp, f"{tag}y.npy")
+    )
+    X, y = NpySource(x_path, y_path).materialize()
+
+    prefix = "" if tag == "tall" else f"{tag}_"
+    records = [
+        _fit_record(
+            f"{prefix}in_memory", rows, cols, select,
+            lambda: MRMRSelector(num_select=select, score=score).fit(X, y),
+            X.nbytes, repeats,
+        )
+    ]
+    base = records[0]["selected"]
+    for bo in blocks:
+        # Warm the compiled accumulate for this block shape (a select=2 fit
+        # traces both the class and feature passes), so the prefetch cells
+        # compare placement strategies, not compilation order.
+        MRMRSelector(num_select=2, score=score, block_obs=bo).fit(
+            NpySource(x_path, y_path)
+        )
+        for pf in prefetches:
+            rec = _fit_record(
+                f"{prefix}streaming@{bo}+pf{pf}", rows, cols, select,
+                lambda bo=bo, pf=pf: MRMRSelector(
+                    num_select=select, score=score, block_obs=bo, prefetch=pf
+                ).fit(NpySource(x_path, y_path)),
+                bo * cols * X.dtype.itemsize + state_bytes, repeats,
+            )
+            rec["block_obs"] = bo
+            rec["prefetch"] = pf
+            if rec["selected"] != base:
+                raise SystemExit(
+                    f"{rec['mode']} diverged: {rec['selected']} != {base}"
+                )
+            records.append(rec)
+    return records
 
 
 def main(argv=None) -> list:
@@ -55,50 +114,44 @@ def main(argv=None) -> list:
     ap.add_argument("--cols", type=int, default=256)
     ap.add_argument("--select", type=int, default=10)
     ap.add_argument("--block-obs", default="16384,65536",
-                    help="comma-separated streaming block sizes")
+                    help="comma-separated streaming block sizes (tall case)")
+    ap.add_argument("--prefetch", default="0,2",
+                    help="comma-separated prefetch depths (0 = synchronous)")
+    ap.add_argument("--wide-rows", type=int, default=4096,
+                    help="wide-case rows (0 skips the wide case)")
+    ap.add_argument("--wide-cols", type=int, default=16384)
+    ap.add_argument("--wide-block-obs", default="1024,4096",
+                    help="comma-separated streaming block sizes (wide case)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timed repeats per cell (min is recorded)")
     ap.add_argument("--out", default=None, help="write records to this JSON")
     args = ap.parse_args(argv)
+    if args.repeats < 1:
+        ap.error(f"--repeats must be >= 1, got {args.repeats}")
 
-    score = MIScore(num_values=2, num_classes=2)
-    blocks = [int(b) for b in args.block_obs.split(",")]
-    state_bytes = args.cols * 2 * 2 * 4  # (N, d_v, d_c) f32 statistics
-
+    prefetches = [int(p) for p in args.prefetch.split(",")]
     with tempfile.TemporaryDirectory() as tmp:
-        src = CorralSource(args.rows, args.cols, seed=args.seed)
-        x_path, y_path = src.to_npy(
-            os.path.join(tmp, "X.npy"), os.path.join(tmp, "y.npy")
+        records = _bench_dataset(
+            "tall", args.rows, args.cols, args.select,
+            [int(b) for b in args.block_obs.split(",")], prefetches,
+            args.seed, tmp, args.repeats,
         )
-        npy = NpySource(x_path, y_path)
-
-        X, y = npy.materialize()
-        records = [
-            _fit_record(
-                "in_memory", args,
-                lambda: MRMRSelector(num_select=args.select,
-                                     score=score).fit(X, y),
-                X.nbytes,
-            )
-        ]
-        base = records[0]["selected"]
-        for bo in blocks:
-            rec = _fit_record(
-                f"streaming@{bo}", args,
-                lambda bo=bo: MRMRSelector(
-                    num_select=args.select, score=score, block_obs=bo
-                ).fit(NpySource(x_path, y_path)),
-                bo * args.cols * X.dtype.itemsize + state_bytes,
-            )
-            rec["block_obs"] = bo
-            if rec["selected"] != base:
+        if args.wide_rows > 0:
+            if args.wide_rows > args.wide_cols * 0.25:
                 raise SystemExit(
-                    f"streaming@{bo} diverged: {rec['selected']} != {base}"
+                    f"--wide-rows {args.wide_rows} / --wide-cols "
+                    f"{args.wide_cols} is not wide (m/n must be <= 0.25)"
                 )
-            records.append(rec)
+            records += _bench_dataset(
+                "wide", args.wide_rows, args.wide_cols, args.select,
+                [int(b) for b in args.wide_block_obs.split(",")], prefetches,
+                args.seed + 1, tmp, args.repeats,
+            )
 
     for r in records:
         print(
-            f"{r['mode']:<18s} {r['seconds']:8.2f}s "
+            f"{r['mode']:<24s} {r['seconds']:8.2f}s "
             f"{r['rows_per_s']:>12,d} rows/s "
             f"peak_input={r['peak_input_bytes'] / 1e6:8.1f} MB"
         )

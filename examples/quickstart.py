@@ -30,3 +30,18 @@ for encoding in ("conventional", "alternative"):
 
 Xt = fs.transform(np.asarray(X))
 print(f"transform: {np.asarray(X).shape} -> {Xt.shape}")
+
+# Out-of-core wide regime: a DataSource streams observation-blocks and a
+# wide dataset (obs/feat <= 0.25) plans feature-sharded statistics — the
+# per-pair statistics state splits across devices instead of replicating.
+# ``prefetch`` double-buffers placement (host reads block i+1 while the
+# device accumulates block i); selections match the in-memory engines.
+from repro.data.sources import CorralSource
+
+wide_src = CorralSource(512, 2048, seed=0)
+fs = MRMRSelector(num_select=10, block_obs=128, prefetch=2).fit(wide_src)
+plan = fs.plan_
+print(f"{'streaming':>12s}: encoding={plan.encoding!r} "
+      f"obs_axes={plan.obs_axes} feat_axes={plan.feat_axes} "
+      f"block_obs={plan.block_obs} prefetch={plan.prefetch}")
+print(f"{'':>12s}  selected {list(fs.selected_)}")

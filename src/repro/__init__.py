@@ -45,6 +45,15 @@ memory), smaller blocks cap memory for a fixed ~``L`` passes of I/O over
 the source.  Selections are identical to the in-memory engines at every
 block size.
 
+Streamed fits follow the same §III aspect rule as in-memory plans: a tall
+source shards blocks over observations, a **wide** source (``m/n <=
+0.25``, the bioinformatics case) shards blocks *and the per-pair
+statistics state* over features — bounding per-device statistics memory
+by ``N/shards`` pairs — and a both-large source runs a 2-D grid.
+``prefetch`` (default 2) double-buffers placement: a host thread reads
+and pads the next block while the device accumulates the current one
+(``prefetch=0`` restores the synchronous placer).
+
 Custom scores (paper §IV.D) run through the same front door::
 
     from repro import CustomScore

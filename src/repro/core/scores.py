@@ -161,6 +161,10 @@ class MIScore(ScoreFn):
 
     ``num_values`` (``d_v``) / ``num_classes`` (``d_c``) follow the paper:
     the union of categorical values over all features, and over the class.
+    Categories must live in ``[0, d)``: out-of-range values (including
+    negatives) one-hot to all-zero rows and vanish from the counts — the
+    auto-resolution paths (``DataSource.stats`` /
+    ``MRMRSelector._resolve_score``) validate this and raise.
     ``use_pallas="auto"`` routes the contingency/MI hot loop through the
     Pallas kernels on TPU and the jnp path elsewhere; ``True`` forces the
     kernels (interpreted off-TPU), ``False`` forces the blocked jnp oracle.

@@ -41,6 +41,7 @@ from repro.core.scores import MIScore, PearsonMIScore, ScoreFn, _OOR
 from repro.data.sources import ArraySource, DataSource
 from repro.dist.meshes import factor_mesh, make_mesh
 from repro.dist.sharding import axes_tuple as _axes_tuple, mesh_extent
+from repro.dist.streaming import effective_block_obs
 
 Array = jax.Array
 
@@ -71,7 +72,10 @@ class SelectionPlan:
     score: ScoreFn | None = None      # score spec (None = auto from data)
     onehot_dtype: str = "bfloat16"    # contingency one-hot storage dtype
     static_inner: bool = False        # fixed-trip recompute loop (dry-run)
-    block_obs: int = 65536            # streaming: observations per block
+    block_obs: int = 65536            # streaming: EFFECTIVE observations per
+                                      # block (rounded up to the obs extent)
+    prefetch: int = 2                 # streaming: blocks placed ahead of
+                                      # device accumulation (0 = synchronous)
 
     @property
     def mesh_axes(self) -> tuple:
@@ -80,6 +84,30 @@ class SelectionPlan:
     @property
     def num_shards(self) -> int:
         return math.prod(self.mesh_shape) if self.mesh_shape else 1
+
+
+def _grid_worthwhile(m: int, n: int, n_dev: int) -> bool:
+    """§III both-large gate, shared by the in-memory and streaming
+    planners: enough devices for a 2-D factorisation, both dims big
+    enough to shard, and no axis dominant enough for 1-D to win."""
+    aspect = m / max(n, 1)
+    return (
+        n_dev >= GRID_MIN_DEVICES
+        and min(m, n) >= GRID_MIN_DIM
+        and WIDE_RATIO < aspect < TALL_RATIO
+    )
+
+
+def _grid_factor(m: int, n: int, n_dev: int) -> tuple | None:
+    """The (obs, feat) device factorisation when a 2-D grid pays off for
+    an (m, n) dataset on ``n_dev`` devices, else None (grid not
+    worthwhile, or the device count only factors 1-D)."""
+    if not _grid_worthwhile(m, n, n_dev):
+        return None
+    # Weight the device split by the aspect ratio: a taller dataset gets
+    # more observation shards.
+    od, fd = factor_mesh(n_dev, bias=max(m / max(n, 1), 1e-6))
+    return None if min(od, fd) == 1 else (od, fd)
 
 
 def _device_count(devices) -> int:
@@ -123,9 +151,7 @@ def plan_selection(
     aspect = m / max(n, 1)
     can_grid = (
         mi_ok
-        and n_dev >= GRID_MIN_DEVICES
-        and min(m, n) >= GRID_MIN_DIM
-        and WIDE_RATIO < aspect < TALL_RATIO
+        and _grid_worthwhile(m, n, n_dev)
         and (mesh is None or (obs_axes and feat_axes))
     )
     if not mi_ok:
@@ -171,16 +197,14 @@ def plan_selection(
         )
 
     if encoding == "grid":
-        # Weight the device split by the aspect ratio: a taller dataset
-        # gets more observation shards.
-        od, fd = factor_mesh(n_dev, bias=max(aspect, 1e-6))
-        if min(od, fd) == 1:  # prime device count: grid degenerates
+        gf = _grid_factor(m, n, n_dev)
+        if gf is None:  # prime device count: grid degenerates
             encoding = "conventional" if aspect >= 1.0 else "alternative"
         else:
             return SelectionPlan(
                 "grid", obs_axes=obs_axes[:1] or ("data",),
                 feat_axes=feat_axes[:1] or ("model",),
-                mesh_shape=(od, fd), **common,
+                mesh_shape=gf, **common,
             )
     if encoding == "conventional":
         return SelectionPlan(
@@ -382,7 +406,19 @@ class MRMRSelector:
       block: contingency feature-block size.
       block_obs: observations per streaming block (``DataSource`` fits) —
         the peak-device-memory knob; larger blocks amortise dispatch and
-        host-to-device transfer, smaller blocks cap memory.
+        host-to-device transfer, smaller blocks cap memory.  The resolved
+        ``plan_.block_obs`` records the effective size after rounding up
+        to the observation-axes extent.
+      prefetch: streaming fits only — host blocks read, padded and placed
+        ahead of device accumulation on a background thread (double
+        buffering); 0 restores the synchronous placer.
+
+    Streamed fits follow the same §III aspect rule as in-memory plans:
+    tall sources shard blocks over ``obs_axes``, wide sources shard blocks
+    *and the per-pair statistics state* over ``feat_axes`` (bounding
+    per-device statistics memory by ``N/shards`` pairs), and both-large
+    sources run a 2-D (obs × feat) grid.  A user ``mesh`` overrides the
+    rule with whatever obs/feat axes it carries.
     """
 
     num_select: int
@@ -395,6 +431,7 @@ class MRMRSelector:
     incremental: bool = True
     block: int = 64
     block_obs: int = 65536
+    prefetch: int = 2
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
@@ -408,6 +445,15 @@ class MRMRSelector:
             jnp.issubdtype(X.dtype, jnp.integer) or X.dtype == jnp.bool_
         )
         if discrete:
+            if int(jnp.min(X)) < 0 or int(jnp.min(y)) < 0:
+                # One-hot contingency rows for negative categories are
+                # all-zero, so those observations would silently vanish
+                # from the MI counts — fail instead of scoring wrong.
+                raise ValueError(
+                    "negative category values in discrete data: one-hot "
+                    "contingency counts drop them silently; remap "
+                    "categories to 0..K-1 before fitting"
+                )
             return MIScore(
                 num_values=int(jnp.max(X)) + 1,
                 num_classes=int(jnp.max(y)) + 1,
@@ -482,33 +528,62 @@ class MRMRSelector:
             return MIScore(num_values=st.num_values, num_classes=st.num_classes)
         return PearsonMIScore()
 
-    def _resolve_stream_plan(self, score: ScoreFn) -> SelectionPlan:
+    def _resolve_stream_plan(
+        self, source: DataSource, score: ScoreFn
+    ) -> SelectionPlan:
+        """Streaming layout per the paper's §III aspect-ratio rule: tall
+        shards blocks over observations, wide shards blocks AND statistics
+        over features, both-large runs a 2-D (obs × feat) grid.  A user
+        mesh overrides the rule: whatever obs/feat axes it carries are
+        used (both present -> 2-D)."""
+        m, n = source.num_obs, source.num_features
+        aspect = m / max(n, 1)
         obs = _axes_tuple(self.obs_axes)
+        feat = _axes_tuple(self.feat_axes)
         if self.mesh is not None:
             obs = tuple(a for a in obs if a in self.mesh.shape)
-            if not obs:
+            feat = tuple(a for a in feat if a in self.mesh.shape)
+            if not obs and not feat:
                 # Silently running unsharded on a user-supplied mesh would
                 # betray the device budget; streaming has no fallback
                 # engine to reroute to, so fail loudly.
                 raise ValueError(
                     f"mesh axes {tuple(self.mesh.shape)} share no axis with "
-                    f"obs_axes {_axes_tuple(self.obs_axes)}; streaming "
-                    "shards blocks over observation axes only"
+                    f"obs_axes {_axes_tuple(self.obs_axes)} or feat_axes "
+                    f"{_axes_tuple(self.feat_axes)}; streaming shards "
+                    "blocks over observation and/or feature axes"
                 )
-            shape = tuple(self.mesh.shape[a] for a in obs)
+            shape = tuple(self.mesh.shape[a] for a in obs + feat)
         else:
             n_dev = _device_count(self.devices)
             if n_dev <= 1:
-                obs, shape = (), ()
+                obs, feat, shape = (), (), ()
+            elif aspect >= TALL_RATIO:
+                obs, feat, shape = obs[:1] or ("data",), (), (n_dev,)
+            elif aspect <= WIDE_RATIO:
+                obs, feat, shape = (), feat[:1] or ("model",), (n_dev,)
             else:
-                obs = obs[:1] or ("data",)
-                shape = (n_dev,)
+                gf = _grid_factor(m, n, n_dev)
+                if gf is not None:
+                    obs = obs[:1] or ("data",)
+                    feat = feat[:1] or ("model",)
+                    shape = gf
+                elif aspect >= 1.0:
+                    obs, feat, shape = obs[:1] or ("data",), (), (n_dev,)
+                else:
+                    obs, feat, shape = (), feat[:1] or ("model",), (n_dev,)
+        # Record the EFFECTIVE block size: the placer rounds blocks up to
+        # the observation extent, and plan_ must report what actually runs
+        # (same rule, one implementation).
+        block_obs = effective_block_obs(
+            self.block_obs, math.prod(shape[: len(obs)]) if obs else 1
+        )
         # Streaming always uses the running-sum redundancy: the recompute
         # baseline would multiply the number of passes over the data by L.
         return SelectionPlan(
-            encoding="streaming", obs_axes=obs, mesh_shape=shape,
-            block=self.block, block_obs=self.block_obs, incremental=True,
-            score=score,
+            encoding="streaming", obs_axes=obs, feat_axes=feat,
+            mesh_shape=shape, block=self.block, block_obs=block_obs,
+            incremental=True, prefetch=self.prefetch, score=score,
         )
 
     def _fit_source(self, source: DataSource) -> "MRMRSelector":
@@ -524,7 +599,7 @@ class MRMRSelector:
                 f"{source.num_features} features"
             )
         score = self._resolve_source_score(source)
-        plan = self._resolve_stream_plan(score)
+        plan = self._resolve_stream_plan(source, score)
         mesh = self._resolve_mesh(plan)
         engine = get_engine("streaming")
         res = engine(source, None, num_select=self.num_select, plan=plan,

@@ -15,8 +15,24 @@ all-reduce when blocks are sharded).  The greedy loop is host-driven:
 Total I/O is ``L`` passes over the source (1 relevance + L-1 redundancy,
 the running-sum formulation — selections identical to the paper's
 recompute, as with the in-memory engines) while peak device memory is
-``O(block_obs × N)`` for the block plus ``O(N · d_v · d_c)`` statistics,
+``O(block_obs × N)`` for the block plus the statistics state,
 independent of ``num_obs``.
+
+Both of the paper's §III regimes stream:
+
+* **tall** — blocks shard over ``obs_axes`` (the paper's conventional
+  partitioning); statistics reduce with one all-reduce per block.
+* **wide** — blocks *and the statistics state* shard over ``feat_axes``
+  (the alternative/vertical partitioning), so the ``O(N · d_v · d_c)``
+  per-pair state that would blow one device spreads across the mesh:
+  per-device statistics memory is ``O(N/shards · d_v · d_c)``.
+* **both-large** — a 2-D (obs × feat) grid combines the two; XLA
+  partitions the accumulate across the grid from the input/state
+  shardings alone.
+
+``prefetch`` double-buffers placement (:class:`~repro.dist.streaming.
+PrefetchPlacer`): the host reads/pads/``device_put``s block ``i+1`` while
+the device accumulates block ``i``; ``0`` restores the synchronous path.
 """
 
 from __future__ import annotations
@@ -30,9 +46,29 @@ from repro.core.mrmr import MRMRResult
 from repro.core.scores import ScoreFn
 from repro.core.selector import register_engine
 from repro.data.sources import DataSource, as_source
-from repro.dist.streaming import BlockPlacer
+from repro.dist.streaming import BlockPlacer, PrefetchPlacer
 
 _NEG_INF = float("-inf")
+
+
+def _placed_blocks(
+    source: DataSource,
+    placer: BlockPlacer,
+    target_col: int | None,
+    prefetch: int,
+):
+    """Iterate the source's blocks as placed (X, target, valid) tuples,
+    extracting the pass's target column on the host; ``prefetch > 0`` runs
+    read+pad+place up to that many blocks ahead on a host thread."""
+
+    def host_blocks():
+        for X_blk, y_blk in source.iter_blocks(placer.block_obs):
+            tgt = y_blk if target_col is None else X_blk[:, target_col]
+            yield X_blk, tgt
+
+    if prefetch > 0:
+        return PrefetchPlacer(placer, depth=prefetch).stream(host_blocks())
+    return (placer(X_blk, tgt) for X_blk, tgt in host_blocks())
 
 
 def _score_pass(
@@ -41,15 +77,16 @@ def _score_pass(
     acc_fn,
     placer: BlockPlacer,
     target_col: int | None,
+    prefetch: int,
 ) -> np.ndarray:
     """One full map-reduce pass: (N,) scores of every feature against the
     class (``target_col=None``) or against feature column ``target_col``."""
     kind = "class" if target_col is None else "feature"
-    state = score.init_state(source.num_features, kind)
-    for X_blk, y_blk in source.iter_blocks(placer.block_obs):
-        tgt = y_blk if target_col is None else X_blk[:, target_col]
-        state = acc_fn(state, *placer(X_blk, tgt))
-    return np.asarray(score.finalize(state), np.float32)
+    state = placer.place_state(score.init_state(placer.padded_features, kind))
+    for placed in _placed_blocks(source, placer, target_col, prefetch):
+        state = acc_fn(state, *placed)
+    scores = np.asarray(score.finalize(state), np.float32)
+    return scores[: source.num_features]  # drop feature-padding columns
 
 
 def mrmr_streaming(
@@ -60,6 +97,8 @@ def mrmr_streaming(
     block_obs: int = 65536,
     mesh: Mesh | None = None,
     obs_axes=("data",),
+    feat_axes=(),
+    prefetch: int = 2,
 ) -> MRMRResult:
     """Greedy mRMR over a :class:`~repro.data.sources.DataSource`.
 
@@ -69,8 +108,13 @@ def mrmr_streaming(
       score: a streaming-capable ``ScoreFn`` (``supports_streaming``).
       block_obs: observations per device block — the peak-memory knob
         (rounded up to the mesh's observation extent).
-      mesh / obs_axes: shard each block over these axes; statistics reduce
-        with one all-reduce per block, the paper's reducer on the ICI ring.
+      mesh / obs_axes / feat_axes: shard each block over the observation
+        axes, the feature axes, or both (the 2-D grid).  Feature sharding
+        also shards the statistics state, the wide-regime memory wall;
+        observation sharding reduces statistics with one all-reduce per
+        block, the paper's reducer on the ICI ring.
+      prefetch: host blocks to read/pad/place ahead of device
+        accumulation (0 = synchronous placement).
     """
     source = as_source(*source) if isinstance(source, tuple) else as_source(source)
     if not score.supports_streaming:
@@ -82,11 +126,18 @@ def mrmr_streaming(
     n = source.num_features
     if not 0 < num_select <= n:
         raise ValueError(f"num_select={num_select} out of range for {n} features")
+    if prefetch < 0:
+        raise ValueError(f"prefetch must be >= 0, got {prefetch}")
 
-    placer = BlockPlacer(block_obs, mesh, obs_axes)
-    acc_fn = jax.jit(score.accumulate)
+    placer = BlockPlacer(block_obs, mesh, obs_axes, feat_axes, num_features=n)
+    # Pin the state layout (feature-sharded in the wide regime) through the
+    # compiled accumulate, so XLA never gathers the per-pair statistics.
+    shardings = placer.state_shardings(
+        score.init_state(placer.padded_features, "class")
+    )
+    acc_fn = jax.jit(score.accumulate, out_shardings=shardings)
 
-    rel = _score_pass(source, score, acc_fn, placer, None)
+    rel = _score_pass(source, score, acc_fn, placer, None, prefetch)
     mask = np.zeros((n,), bool)
     red_sum = np.zeros((n,), np.float32)
     selected = np.full((num_select,), -1, np.int32)
@@ -100,7 +151,9 @@ def mrmr_streaming(
         selected[l], gains[l] = k, g[k]
         mask[k] = True
         if l + 1 < num_select:
-            red_sum = red_sum + _score_pass(source, score, acc_fn, placer, k)
+            red_sum = red_sum + _score_pass(
+                source, score, acc_fn, placer, k, prefetch
+            )
     return MRMRResult(selected=jnp.asarray(selected), gains=jnp.asarray(gains))
 
 
@@ -114,4 +167,6 @@ def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
         block_obs=plan.block_obs,
         mesh=mesh,
         obs_axes=plan.obs_axes,
+        feat_axes=plan.feat_axes,
+        prefetch=plan.prefetch,
     )

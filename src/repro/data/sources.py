@@ -100,6 +100,7 @@ class DataSource:
         if cached is not None:
             return cached
         x_max = y_max = 0
+        x_min = y_min = 0
         discrete = True
         for X, y in self.iter_blocks(block_obs):
             discrete = discrete and (
@@ -109,6 +110,18 @@ class DataSource:
                 break  # dtype settles it; don't burn a full pass of I/O
             x_max = max(x_max, int(X.max(initial=0)))
             y_max = max(y_max, int(y.max(initial=0)))
+            x_min = min(x_min, int(X.min(initial=0)))
+            y_min = min(y_min, int(y.min(initial=0)))
+        if discrete and (x_min < 0 or y_min < 0):
+            # A negative category one-hots to an all-zero row, so the
+            # observation silently vanishes from every contingency count
+            # and the resulting MI is wrong with no error anywhere.
+            raise ValueError(
+                "negative category values in discrete source "
+                f"(min feature value {x_min}, min target value {y_min}): "
+                "one-hot contingency counts drop them silently; remap "
+                "categories to 0..K-1 before fitting"
+            )
         st = SourceStats(
             discrete=discrete,
             num_values=x_max + 1 if discrete else 0,
@@ -127,7 +140,16 @@ class DataSource:
     ) -> tuple[str, str]:
         """Stream the source into ``.npy`` files (block-wise via memmap, no
         full-dataset host allocation) — ready for :class:`NpySource`."""
-        first = next(iter(self.iter_blocks(1)))  # dtype peek, one row
+        peek = self.iter_blocks(1)
+        try:
+            first = next(peek)  # dtype peek, one row
+        finally:
+            # Close the peek iterator explicitly: an abandoned generator
+            # keeps its frame (and e.g. CSVSource's open file handle)
+            # alive until GC, which is not prompt off-CPython.
+            close = getattr(peek, "close", None)
+            if close is not None:
+                close()
         Xm = np.lib.format.open_memmap(
             x_path, mode="w+", dtype=first[0].dtype,
             shape=(self.num_obs, self.num_features),
@@ -164,7 +186,14 @@ class ArraySource(DataSource):
         # device arrays to host exactly once.
         self.X = np.asanyarray(X)
         self.y = np.asanyarray(y)
-        if self.X.ndim != 2 or self.y.shape[:1] != self.X.shape[:1]:
+        # y must be exactly 1-D: a (M, k) target would pass a leading-dim
+        # check yet mis-shape every downstream streaming accumulation
+        # (Pearson moments broadcast (B,) targets against (B, N) blocks).
+        if (
+            self.X.ndim != 2
+            or self.y.ndim != 1
+            or self.y.shape[0] != self.X.shape[0]
+        ):
             raise ValueError(f"bad shapes X{self.X.shape} y{self.y.shape}")
 
     @property

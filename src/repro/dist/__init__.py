@@ -13,12 +13,14 @@ repo (drivers, models, launchers) never talks to raw jax device state:
   and axis-reuse guards.
 * ``repro.dist.pipeline`` — GPipe pipeline parallelism over a mesh axis.
 * ``repro.dist.streaming`` — ``BlockPlacer``: pad-and-shard placement of
-  streamed observation-blocks for the out-of-core fit path.
+  streamed observation-blocks (obs-sharded, feature-sharded or 2-D grid)
+  for the out-of-core fit path, plus ``PrefetchPlacer``, its
+  double-buffered wrapper overlapping host reads with device compute.
 """
 
 from repro.dist.compat import pvary, shard_map  # noqa: F401
-from repro.dist.meshes import make_mesh  # noqa: F401
-from repro.dist.streaming import BlockPlacer  # noqa: F401
+from repro.dist.meshes import factor_mesh, make_mesh  # noqa: F401
+from repro.dist.streaming import BlockPlacer, PrefetchPlacer  # noqa: F401
 from repro.dist.sharding import (  # noqa: F401
     ShardingRules,
     axes_tuple,

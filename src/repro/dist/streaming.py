@@ -4,17 +4,36 @@ The streaming fit path moves host blocks onto devices one at a time; this
 module owns that placement the same way ``repro.core.selector`` owns it
 for in-memory fits.  ``BlockPlacer`` pads every incoming block to one
 fixed row count (so the engine's accumulate step compiles exactly once)
-and, given a mesh, lands the block sharded over the observation axes —
-each device holds ``block_obs / extent`` rows and XLA partitions the
-statistics accumulation data-parallel, reducing with the same all-reduce
-the in-memory conventional engine uses.  Padded rows are reported through
-a ``valid`` mask; what a score does with it (out-of-range categories,
-zero-weighted moments) is the score's business.
+and, given a mesh, lands the block sharded per the plan's regime:
+
+* **obs-sharded** (tall datasets) — rows split over ``obs_axes``, each
+  device accumulating statistics for every feature on its row slice; XLA
+  reduces with the same all-reduce the in-memory conventional engine uses.
+* **feature-sharded** (wide datasets) — columns split over ``feat_axes``
+  and the *statistics state itself* lives sharded over features
+  (``place_state`` / ``state_shardings``), so per-device statistics memory
+  is ``O(N/shards · d_v · d_c)`` instead of the full per-pair state.
+* **2-D grid** — both at once: rows over ``obs_axes``, columns and state
+  over ``feat_axes``; XLA partitions the accumulate across the grid and
+  all-reduces over the observation axes only.
+
+Padded rows are reported through a ``valid`` mask; what a score does with
+it (out-of-range categories, zero-weighted moments) is the score's
+business.  Padded feature columns produce junk statistics rows that the
+engine slices off after ``finalize``.
+
+``PrefetchPlacer`` is the double-buffered face of the same placement: a
+bounded host thread reads and pads block ``i+1`` while the consumer
+places (async ``device_put``) and the device accumulates block ``i``, so
+streaming throughput approaches the device-bound in-memory rate instead
+of serialising source I/O with placement.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -22,6 +41,18 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.dist.sharding import axes_tuple, mesh_extent
+
+# End-of-stream sentinel for the prefetch queue.
+_DONE = object()
+
+
+def effective_block_obs(block_obs: int, obs_extent: int) -> int:
+    """The placer's one block-rounding rule — blocks round UP to a
+    multiple of the observation-axes extent so every shard gets equal
+    rows.  Shared with ``MRMRSelector._resolve_stream_plan`` so
+    ``plan_.block_obs`` always reports exactly what the placer runs."""
+    ext = max(int(obs_extent), 1)
+    return -(-int(block_obs) // ext) * ext
 
 
 @dataclasses.dataclass
@@ -34,39 +65,118 @@ class BlockPlacer:
       mesh: device mesh, or None for single-device placement.
       obs_axes: mesh axes to shard observations over (intersected with the
         mesh's axes).
+      feat_axes: mesh axes to shard features — and the statistics state —
+        over (intersected with the mesh's axes).
+      num_features: global feature count; required for feature sharding,
+        where columns are padded up to a multiple of the feature-axes
+        extent (``padded_features``) so every shard gets equal columns.
     """
 
     block_obs: int
     mesh: Mesh | None = None
     obs_axes: tuple = ()
+    feat_axes: tuple = ()
+    num_features: int | None = None
 
     def __post_init__(self):
-        axes = axes_tuple(self.obs_axes)
+        obs = axes_tuple(self.obs_axes)
+        feat = axes_tuple(self.feat_axes)
         if self.mesh is not None:
-            axes = tuple(a for a in axes if a in self.mesh.shape)
-            if not axes:
+            obs = tuple(a for a in obs if a in self.mesh.shape)
+            feat = tuple(a for a in feat if a in self.mesh.shape)
+            if not obs and not feat:
                 # A mesh the blocks can't shard over would silently run
                 # single-device against the caller's device budget — guard
                 # here so the direct engine API fails like the selector.
                 raise ValueError(
                     f"mesh axes {tuple(self.mesh.shape)} share no axis "
-                    f"with obs_axes {axes_tuple(self.obs_axes)}"
+                    f"with obs_axes {axes_tuple(self.obs_axes)} or "
+                    f"feat_axes {axes_tuple(self.feat_axes)}"
                 )
-        self.obs_axes = axes
-        ext = mesh_extent(self.mesh, axes)
-        self.block_obs = -(-int(self.block_obs) // ext) * ext
-        if self.mesh is not None and axes:
-            self._shard_mat = NamedSharding(self.mesh, P(axes, None))
-            self._shard_vec = NamedSharding(self.mesh, P(axes))
+            if feat and self.num_features is None:
+                # Without the global feature count the placer can neither
+                # pad columns to the shard extent nor shard the statistics
+                # state — feature sharding would fail late (opaque
+                # device_put error) or silently replicate the state it
+                # exists to split.
+                raise ValueError(
+                    "feature sharding requires num_features "
+                    f"(feat_axes={feat} on mesh {tuple(self.mesh.shape)})"
+                )
+        self.obs_axes, self.feat_axes = obs, feat
+        oext = mesh_extent(self.mesh, obs)
+        fext = mesh_extent(self.mesh, feat)
+        self.block_obs = effective_block_obs(self.block_obs, oext)
+        self._feat_pad = (
+            -(-int(self.num_features) // fext) * fext
+            if self.num_features is not None
+            else None
+        )
+        if self.mesh is not None:
+            ospec = obs if obs else None
+            fspec = feat if feat else None
+            self._shard_mat = NamedSharding(self.mesh, P(ospec, fspec))
+            self._shard_vec = NamedSharding(self.mesh, P(ospec))
         else:
             self._shard_mat = self._shard_vec = None
 
-    def __call__(self, X_block: np.ndarray, target: np.ndarray):
-        """(B, N), (B,) host block -> placed (X, target, valid), B' fixed."""
-        b = X_block.shape[0]
+    @property
+    def padded_features(self) -> int:
+        """Feature count after padding to the feature-axes extent."""
+        if self._feat_pad is None:
+            raise ValueError("BlockPlacer was built without num_features")
+        return self._feat_pad
+
+    # -- statistics-state placement -------------------------------------
+
+    def state_shardings(self, state):
+        """Shardings for a statistics pytree (None when there is no mesh):
+        leaves with a leading ``padded_features`` dim shard over
+        ``feat_axes``, everything else (scalars, running counts) is
+        replicated.  Used both to place the initial state and as the
+        accumulate step's ``out_shardings``, pinning the state layout so
+        per-device statistics memory scales with ``1/feature-shards``."""
+        if self.mesh is None:
+            return None
+
+        def sh(leaf):
+            leaf = jnp.asarray(leaf)
+            if (
+                self.feat_axes
+                and self._feat_pad is not None
+                and leaf.ndim >= 1
+                and leaf.shape[0] == self._feat_pad
+            ):
+                spec = P(self.feat_axes, *([None] * (leaf.ndim - 1)))
+                return NamedSharding(self.mesh, spec)
+            return NamedSharding(self.mesh, P())
+
+        return jax.tree.map(sh, state)
+
+    def place_state(self, state):
+        """Land a freshly initialised statistics pytree per
+        :meth:`state_shardings` (identity without a mesh)."""
+        shardings = self.state_shardings(state)
+        if shardings is None:
+            return jax.tree.map(jnp.asarray, state)
+        return jax.tree.map(
+            lambda leaf, s: jax.device_put(jnp.asarray(leaf), s),
+            state,
+            shardings,
+        )
+
+    def stage(self, X_block: np.ndarray, target: np.ndarray):
+        """Host half: pad a (B, N), (B,) block to the fixed (block_obs,
+        padded-features) shape + build the valid mask.  Pure numpy — safe
+        to run on a background thread (``PrefetchPlacer`` does)."""
+        b, nf = X_block.shape
         if b > self.block_obs:
             raise ValueError(
                 f"block of {b} rows exceeds block_obs={self.block_obs}"
+            )
+        if self.num_features is not None and nf != self.num_features:
+            raise ValueError(
+                f"block has {nf} features, placer expects {self.num_features}"
             )
         if b < self.block_obs:
             pad = self.block_obs - b
@@ -74,7 +184,25 @@ class BlockPlacer:
                 [X_block, np.zeros((pad,) + X_block.shape[1:], X_block.dtype)]
             )
             target = np.concatenate([target, np.zeros((pad,), target.dtype)])
+        if self._feat_pad is not None and nf < self._feat_pad:
+            # Zero-filled pad columns: their statistics rows are junk by
+            # construction and the engine slices them off after finalize.
+            X_block = np.concatenate(
+                [
+                    X_block,
+                    np.zeros(
+                        (X_block.shape[0], self._feat_pad - nf), X_block.dtype
+                    ),
+                ],
+                axis=1,
+            )
         valid = np.arange(self.block_obs) < b
+        return X_block, target, valid
+
+    def place(self, staged):
+        """Device half: land a staged (X, target, valid) triple per the
+        mesh plan.  ``device_put`` is async — it enqueues and returns."""
+        X_block, target, valid = staged
         if self._shard_mat is not None:
             return (
                 jax.device_put(X_block, self._shard_mat),
@@ -82,3 +210,66 @@ class BlockPlacer:
                 jax.device_put(valid, self._shard_vec),
             )
         return jnp.asarray(X_block), jnp.asarray(target), jnp.asarray(valid)
+
+    def __call__(self, X_block: np.ndarray, target: np.ndarray):
+        """(B, N), (B,) host block -> placed (X, target, valid), B' fixed."""
+        return self.place(self.stage(X_block, target))
+
+
+@dataclasses.dataclass
+class PrefetchPlacer:
+    """Double-buffered placement: a host thread runs the wrapped placer's
+    *staging* half (source read + pad — pure numpy) up to ``depth`` blocks
+    ahead, while the consumer thread runs the *placement* half
+    (``device_put``, async) and the device accumulates the previous block.
+    The worker never touches jax, so it cannot contend with the XLA
+    runtime's own thread pool.  Exceptions raised while reading or staging
+    re-raise in the consumer, and abandoning the iterator stops the
+    thread.
+    """
+
+    placer: BlockPlacer
+    depth: int = 2
+
+    def __post_init__(self):
+        if self.depth < 1:
+            raise ValueError(f"prefetch depth must be >= 1, got {self.depth}")
+
+    def stream(self, host_blocks):
+        """``(X_block, target)`` host iterator -> placed-tuple iterator."""
+        q: queue.Queue = queue.Queue(maxsize=self.depth)
+        stop = threading.Event()
+
+        def produce():
+            # Plain blocking puts: zero handoff latency in steady state.
+            # On early consumer exit the finally-block below sets ``stop``
+            # and drains the queue until this thread observes it and dies.
+            try:
+                for X_block, target in host_blocks:
+                    if stop.is_set():
+                        return
+                    q.put((self.placer.stage(X_block, target), None))
+                q.put((_DONE, None))
+            except BaseException as exc:  # re-raised by the consumer
+                q.put((None, exc))
+
+        worker = threading.Thread(
+            target=produce, name="block-prefetch", daemon=True
+        )
+        worker.start()
+        try:
+            while True:
+                staged, exc = q.get()
+                if exc is not None:
+                    raise exc
+                if staged is _DONE:
+                    return
+                yield self.placer.place(staged)
+        finally:
+            stop.set()
+            while worker.is_alive():
+                try:  # unblock a producer waiting on a full queue
+                    q.get_nowait()
+                except queue.Empty:
+                    pass
+                worker.join(timeout=0.01)

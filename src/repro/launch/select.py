@@ -10,7 +10,12 @@
     # Out-of-core: stream a memmapped .npy that never fits in device
     # memory, 65536 observations per block:
     PYTHONPATH=src python -m repro.launch.select \
-        --input data.npy --target target.npy --block-obs 65536
+        --input data.npy --target target.npy --block-obs 65536 --prefetch 2
+
+    # Wide regime: stream with feature-sharded statistics over 2 devices
+    # (the per-pair statistics state splits across the model axis):
+    PYTHONPATH=src REPRO_DEVICES=2 python -m repro.launch.select \
+        --input wide.npy --target target.npy --block-obs 4096 --mesh-feat 2
 
 Inputs: ``--input data.npz`` (arrays ``X`` rows=observations, ``y``) loads
 in-memory; ``--input data.npy`` (+ ``--target target.npy``) memmaps and
@@ -21,7 +26,10 @@ through :class:`repro.MRMRSelector`: encoding ``auto`` applies the paper's
 §III aspect-ratio rule (streamed sources always run the streaming engine),
 explicit encodings shard over whatever devices jax exposes, and ``grid``
 places a 2-D (observation × feature) mesh — shape from
-``--mesh-obs``/``--mesh-feat`` or auto-factored.  ``REPRO_DEVICES=N``
+``--mesh-obs``/``--mesh-feat`` or auto-factored.  The same mesh flags
+apply to streamed inputs: tall sources shard blocks over the observation
+axis, wide sources shard blocks and statistics over the feature axis, and
+a mesh with both axes streams on the 2-D grid.  ``REPRO_DEVICES=N``
 forces N simulated host devices (set before jax initialises).
 """
 
@@ -91,6 +99,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--block", type=int, default=64)
     ap.add_argument("--block-obs", type=int, default=65536,
                     help="observations per streamed block (DataSource inputs)")
+    ap.add_argument("--prefetch", type=int, default=2,
+                    help="streamed blocks placed ahead of device "
+                         "accumulation (0 = synchronous placer)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -115,7 +126,7 @@ def main(argv=None) -> dict:
     sel = MRMRSelector(
         num_select=args.select, score=score, encoding=args.encoding,
         mesh=mesh, incremental=bool(args.incremental), block=args.block,
-        block_obs=args.block_obs,
+        block_obs=args.block_obs, prefetch=args.prefetch,
     )
     sel = sel.fit(source) if source is not None else sel.fit(X, y)
     plan = sel.plan_
@@ -129,7 +140,8 @@ def main(argv=None) -> dict:
         "seconds": round(time.time() - t0, 3),
     }
     if plan.encoding == "streaming":
-        out["block_obs"] = plan.block_obs
+        out["block_obs"] = plan.block_obs  # effective (rounded) size
+        out["prefetch"] = plan.prefetch
     print(json.dumps(out))
     return out
 

@@ -12,11 +12,12 @@ from repro.data.sources import (
     ArraySource,
     CSVSource,
     CorralSource,
+    DataSource,
     NpySource,
     SyntheticTokenSource,
     as_source,
 )
-from repro.dist import BlockPlacer, make_mesh
+from repro.dist import BlockPlacer, PrefetchPlacer, factor_mesh, make_mesh
 
 
 @pytest.fixture(scope="module")
@@ -270,6 +271,301 @@ class TestStreamingPrimitives:
         with pytest.raises(ValueError, match="no axis"):
             BlockPlacer(16, mesh, ("data",))
 
+    def test_block_placer_pads_features(self):
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        placer = BlockPlacer(8, mesh, (), ("model",), num_features=5)
+        n_pad = placer.padded_features
+        assert n_pad % len(jax.devices()) == 0 and n_pad >= 5
+        X, t, valid = placer(np.ones((8, 5), np.int8), np.zeros(8, np.int8))
+        assert X.shape == (8, n_pad)
+        # pad columns are zero-filled, real columns intact
+        assert np.asarray(X)[:, :5].all()
+        assert not np.asarray(X)[:, 5:].any()
+
+    def test_block_placer_rejects_feature_mismatch(self):
+        placer = BlockPlacer(8, num_features=5)
+        with pytest.raises(ValueError, match="features"):
+            placer(np.zeros((4, 7), np.int8), np.zeros(4, np.int8))
+
+    def test_block_placer_feature_sharding_needs_num_features(self):
+        # Feature sharding without the global feature count would fail
+        # late (opaque device_put error) or silently replicate the state.
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        with pytest.raises(ValueError, match="num_features"):
+            BlockPlacer(8, mesh, (), ("model",))
+
+    def test_state_sharded_over_features(self):
+        # The wide-regime memory claim: per-device statistics hold
+        # padded_features / shards feature rows, not all of them.
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("model",))
+        placer = BlockPlacer(64, mesh, (), ("model",), num_features=32)
+        state = placer.place_state(
+            MIScore(2, 2).init_state(placer.padded_features)
+        )
+        shard_rows = {s.data.shape[0] for s in state.addressable_shards}
+        assert shard_rows == {placer.padded_features // n_dev}
+
+
+@pytest.fixture(scope="module")
+def wide():
+    # 256 obs x 1024 feat: m/n = 0.25, the paper's wide/bioinformatics
+    # regime where statistics must shard over features.
+    X, y = CorralSource(256, 1024, seed=5).materialize()
+    return X, y
+
+
+@pytest.fixture(scope="module")
+def wide_alternative(wide):
+    X, y = wide
+    sel = MRMRSelector(
+        num_select=5, score=MIScore(2, 2), encoding="alternative"
+    ).fit(X, y)
+    return sel.selected_, sel.gains_
+
+
+class TestWideStreaming:
+    """Wide-regime acceptance: feature-sharded and 2-D streaming selections
+    identical to the in-memory alternative engine at every block size."""
+
+    # 64 divides 256; 100 doesn't; 999 exceeds it — all must match.
+    @pytest.mark.parametrize("block_obs", [64, 100, 999])
+    def test_feature_sharded_matches_alternative(
+        self, wide, wide_alternative, block_obs
+    ):
+        X, y = wide
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=block_obs
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, wide_alternative[0])
+        np.testing.assert_allclose(sel.gains_, wide_alternative[1],
+                                   rtol=1e-4, atol=1e-5)
+        assert sel.plan_.encoding == "streaming"
+        assert sel.plan_.obs_axes == () and sel.plan_.feat_axes == ("model",)
+
+    def test_non_divisible_feature_count(self):
+        # 30 features don't divide a multi-device feature mesh: the placer
+        # pads columns, the engine slices the junk statistics rows off.
+        X, y = CorralSource(200, 30, seed=1).materialize()
+        want = MRMRSelector(
+            num_select=4, score=MIScore(2, 2), encoding="alternative"
+        ).fit(X, y)
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        got = MRMRSelector(
+            num_select=4, score=MIScore(2, 2), mesh=mesh, block_obs=64
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+
+    def test_grid_2d_matches_alternative(self, wide, wide_alternative):
+        X, y = wide
+        od, fd = factor_mesh(len(jax.devices()))
+        mesh = make_mesh((od, fd), ("data", "model"))
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=100
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, wide_alternative[0])
+        assert sel.plan_.obs_axes == ("data",)
+        assert sel.plan_.feat_axes == ("model",)
+        # the plan reports the EFFECTIVE block size (rounded to obs extent)
+        assert sel.plan_.block_obs == -(-100 // od) * od
+
+    def test_pearson_feature_sharded(self):
+        rng = np.random.default_rng(7)
+        X = rng.normal(size=(200, 600)).astype(np.float32)
+        y = (0.5 * X[:, 3] + 0.3 * X[:, 10]
+             + 0.1 * rng.normal(size=200)).astype(np.float32)
+        want = MRMRSelector(
+            num_select=4, score=PearsonMIScore(), encoding="alternative"
+        ).fit(X, y)
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        got = MRMRSelector(
+            num_select=4, score=PearsonMIScore(), mesh=mesh, block_obs=64
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_allclose(got.gains_, want.gains_,
+                                   rtol=1e-3, atol=1e-4)
+
+    def test_auto_wide_plan_runs_feature_sharded(self, wide, wide_alternative):
+        # No user mesh: the aspect rule itself must route a wide source to
+        # feature sharding (or unsharded on one device) and still match.
+        X, y = wide
+        sel = MRMRSelector(num_select=5, score=MIScore(2, 2),
+                           block_obs=100).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, wide_alternative[0])
+        assert sel.plan_.obs_axes == ()
+        if len(jax.devices()) > 1:
+            assert sel.plan_.feat_axes == ("model",)
+
+    def test_stream_plan_aspect_rule(self):
+        # §III rule on an 8-device budget (plan-only, no mesh built):
+        # tall -> obs-sharded, wide -> feat-sharded, both-large -> 2-D.
+        score = MIScore(2, 2)
+        sel = MRMRSelector(num_select=2, devices=8)
+        z = lambda m, n: ArraySource(
+            np.zeros((m, n), np.int8), np.zeros(m, np.int8)
+        )
+        tall = sel._resolve_stream_plan(z(4096, 64), score)
+        assert tall.obs_axes == ("data",) and tall.feat_axes == ()
+        assert tall.mesh_shape == (8,)
+        wide = sel._resolve_stream_plan(z(64, 4096), score)
+        assert wide.obs_axes == () and wide.feat_axes == ("model",)
+        assert wide.mesh_shape == (8,)
+        grid = sel._resolve_stream_plan(z(1024, 1024), score)
+        assert grid.obs_axes == ("data",) and grid.feat_axes == ("model",)
+        assert len(grid.mesh_shape) == 2 and min(grid.mesh_shape) > 1
+
+    def test_plan_records_effective_block_obs(self):
+        # Satellite: plan_ must report the placer's rounded block size,
+        # not the user's requested one.
+        score = MIScore(2, 2)
+        sel = MRMRSelector(num_select=2, devices=8, block_obs=100)
+        src = ArraySource(np.zeros((4096, 64), np.int8),
+                          np.zeros(4096, np.int8))
+        plan = sel._resolve_stream_plan(src, score)
+        assert plan.block_obs == 104  # rounded up to the 8-way obs extent
+
+    def test_effective_block_obs_end_to_end(self, corral):
+        X, y = corral
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("data",))
+        sel = MRMRSelector(num_select=2, score=MIScore(2, 2), mesh=mesh,
+                           block_obs=200).fit(ArraySource(X, y))
+        assert sel.plan_.block_obs == -(-200 // n_dev) * n_dev
+
+
+class TestPrefetch:
+    def test_prefetch_depths_match_synchronous(self, corral, corral_selected):
+        X, y = corral
+        for prefetch in (0, 1, 3):
+            sel = MRMRSelector(
+                num_select=5, score=MIScore(2, 2), block_obs=300,
+                prefetch=prefetch,
+            ).fit(ArraySource(X, y))
+            np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+
+    def test_prefetch_propagates_source_errors(self, corral):
+        X, y = corral
+
+        class Boom(ArraySource):
+            def iter_blocks(self, block_obs):
+                it = super().iter_blocks(block_obs)
+                yield next(it)
+                raise RuntimeError("disk died")
+
+        with pytest.raises(RuntimeError, match="disk died"):
+            MRMRSelector(
+                num_select=2, score=MIScore(2, 2), block_obs=300, prefetch=2
+            ).fit(Boom(X, y))
+
+    def test_prefetch_placer_stream(self):
+        placer = BlockPlacer(4, num_features=3)
+        blocks = [
+            (np.full((4, 3), i, np.int8), np.full((4,), i, np.int8))
+            for i in range(5)
+        ]
+        out = list(PrefetchPlacer(placer, depth=2).stream(iter(blocks)))
+        assert len(out) == 5
+        for i, (X, t, valid) in enumerate(out):
+            assert int(np.asarray(X)[0, 0]) == i
+            assert np.asarray(valid).all()
+
+    def test_prefetch_placer_abandoned_consumer_stops_worker(self):
+        import threading
+
+        placer = BlockPlacer(2, num_features=1)
+        produced = []
+
+        def blocks():
+            for i in range(1000):
+                produced.append(i)
+                yield np.zeros((2, 1), np.int8), np.zeros(2, np.int8)
+
+        stream = PrefetchPlacer(placer, depth=1).stream(blocks())
+        next(stream)
+        stream.close()  # abandon: the worker must stop, not run to 1000
+        deadline = len(produced)
+        assert deadline < 1000
+        # no stray prefetch threads left running
+        assert not any(
+            t.name == "block-prefetch" and t.is_alive()
+            for t in threading.enumerate()
+        )
+
+    def test_depth_guard(self):
+        with pytest.raises(ValueError, match="depth"):
+            PrefetchPlacer(BlockPlacer(8), depth=0)
+        with pytest.raises(ValueError, match="prefetch"):
+            mrmr_streaming(
+                (np.zeros((8, 4), np.int8), np.zeros(8, np.int8)),
+                2, MIScore(2, 2), prefetch=-1,
+            )
+
+
+class TestSatelliteRegressions:
+    def test_array_source_rejects_2d_target(self, corral):
+        # (M, k) targets used to slip through the leading-dim check and
+        # mis-shape Pearson streaming accumulation downstream.
+        X, y = corral
+        with pytest.raises(ValueError, match="bad shapes"):
+            ArraySource(X, np.stack([y, y], axis=1))
+        with pytest.raises(ValueError, match="bad shapes"):
+            ArraySource(X, y[:, None])
+
+    def test_to_npy_closes_peek_iterator(self, tmp_path, corral):
+        # The one-row dtype peek must close its block iterator explicitly
+        # (an abandoned generator holds e.g. CSVSource's file open until
+        # GC).  A non-generator iterator never gets auto-closed, so this
+        # fails without the explicit close.
+        X, y = corral
+        closed = []
+
+        class PeekTrackingSource(ArraySource):
+            def iter_blocks(self, block_obs):
+                inner = super().iter_blocks(block_obs)
+
+                class It:
+                    def __iter__(self):
+                        return self
+
+                    def __next__(self):
+                        return next(inner)
+
+                    def close(self):
+                        closed.append(block_obs)
+
+                return It()
+
+        src = PeekTrackingSource(X, y)
+        src.to_npy(str(tmp_path / "X.npy"), str(tmp_path / "y.npy"))
+        assert 1 in closed  # the block_obs=1 peek iterator was closed
+
+    def test_stats_rejects_negative_categories(self):
+        y = np.array([0, 1], np.int32)
+        bad_x = ArraySource(np.array([[0, 1], [-1, 2]], np.int32), y)
+        with pytest.raises(ValueError, match="negative category"):
+            bad_x.stats()
+        bad_y = ArraySource(np.array([[0, 1], [1, 2]], np.int32),
+                            np.array([0, -1], np.int32))
+        with pytest.raises(ValueError, match="negative category"):
+            bad_y.stats()
+        # continuous data may be negative — no validation there
+        ok = ArraySource(np.array([[-1.0, 1.0]], np.float32),
+                         np.array([0.5], np.float32))
+        assert not ok.stats().discrete
+
+    def test_streaming_fit_rejects_negative_categories(self):
+        X = np.array([[0, 1], [-1, 2], [1, 0]], np.int32)
+        y = np.array([0, 1, 0], np.int32)
+        with pytest.raises(ValueError, match="negative category"):
+            MRMRSelector(num_select=1).fit(ArraySource(X, y))
+
+    def test_in_memory_fit_rejects_negative_categories(self):
+        X = np.array([[0, 1], [2, -3], [1, 0]], np.int32)
+        y = np.array([0, 1, 0], np.int32)
+        with pytest.raises(ValueError, match="negative category"):
+            MRMRSelector(num_select=1).fit(X, y)
+
 
 class TestFrontDoorGuards:
     def test_y_with_source_raises(self, corral):
@@ -298,11 +594,12 @@ class TestFrontDoorGuards:
         with pytest.raises(ValueError, match="out of range"):
             MRMRSelector(num_select=99).fit(ArraySource(X, y))
 
-    def test_mesh_without_obs_axis_raises(self, corral):
-        # A user-supplied mesh the streaming engine can't shard over must
-        # fail loudly, not silently run single-device.
+    def test_mesh_without_any_shardable_axis_raises(self, corral):
+        # A user-supplied mesh the streaming engine can't shard over (no
+        # observation OR feature axis) must fail loudly, not silently run
+        # single-device.
         X, y = corral
-        mesh = make_mesh((1,), ("model",))
+        mesh = make_mesh((1,), ("pipe",))
         with pytest.raises(ValueError, match="obs_axes"):
             MRMRSelector(num_select=2, score=MIScore(2, 2),
                          mesh=mesh).fit(ArraySource(X, y))
