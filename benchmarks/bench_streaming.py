@@ -11,12 +11,21 @@ comparison.  A second **wide** dataset (``--wide-rows``/``--wide-cols``,
 ``m/n <= 0.25`` — the regime where feature-sharded statistics matter)
 runs the same grid against the in-memory alternative engine.
 
+``--criterion mid,miq`` adds a greedy-objective axis: the FIRST criterion
+runs the full (block x prefetch) grid on both datasets; each further
+criterion runs one tall cell (largest block, last prefetch depth) plus
+its own in-memory baseline — enough to show the criterion fold is free
+(the fold is O(N) host math per pick; passes/IO are identical), without
+doubling the grid.  Streaming cells must reproduce the in-memory
+selections OF THE SAME CRITERION.
+
     PYTHONPATH=src python benchmarks/bench_streaming.py --rows 200000 \
         --cols 256 --select 10 --block-obs 16384,65536 --prefetch 0,2 \
-        --out BENCH_streaming.json
+        --criterion mid,miq --out BENCH_streaming.json
 
 The committed ``BENCH_streaming.json`` at the repo root is the baseline
-(default sizes above) that later PRs compare their perf trajectory to.
+(default sizes above, criteria ``mid,miq``) that later PRs compare their
+perf trajectory to.
 """
 
 from __future__ import annotations
@@ -62,23 +71,30 @@ def _fit_record(
 
 def _bench_dataset(
     tag: str, rows: int, cols: int, select: int, blocks, prefetches,
-    seed: int, tmp: str, repeats: int,
+    seed: int, tmp: str, repeats: int, criterion: str = "mid",
 ) -> list:
     """In-memory baseline + the (block_obs × prefetch) streaming grid for
-    one dataset; every streaming cell must reproduce the baseline."""
+    one dataset; every streaming cell must reproduce the baseline OF THE
+    SAME CRITERION."""
     score = MIScore(num_values=2, num_classes=2)
     state_bytes = cols * 2 * 2 * 4  # (N, d_v, d_c) statistics
-    src = CorralSource(rows, cols, seed=seed)
-    x_path, y_path = src.to_npy(
-        os.path.join(tmp, f"{tag}X.npy"), os.path.join(tmp, f"{tag}y.npy")
-    )
+    x_path = os.path.join(tmp, f"{tag}X.npy")
+    y_path = os.path.join(tmp, f"{tag}y.npy")
+    if not (os.path.exists(x_path) and os.path.exists(y_path)):
+        # tag + seed pin the dataset, so a later criterion's run over the
+        # same tag reuses the files instead of regenerating ~rows x cols.
+        CorralSource(rows, cols, seed=seed).to_npy(x_path, y_path)
     X, y = NpySource(x_path, y_path).materialize()
 
-    prefix = "" if tag == "tall" else f"{tag}_"
+    parts = ([] if tag == "tall" else [tag]) + (
+        [] if criterion == "mid" else [criterion]
+    )
+    prefix = "".join(f"{p}_" for p in parts)
     records = [
         _fit_record(
             f"{prefix}in_memory", rows, cols, select,
-            lambda: MRMRSelector(num_select=select, score=score).fit(X, y),
+            lambda: MRMRSelector(num_select=select, score=score,
+                                 criterion=criterion).fit(X, y),
             X.nbytes, repeats,
         )
     ]
@@ -94,7 +110,8 @@ def _bench_dataset(
             rec = _fit_record(
                 f"{prefix}streaming@{bo}+pf{pf}", rows, cols, select,
                 lambda bo=bo, pf=pf: MRMRSelector(
-                    num_select=select, score=score, block_obs=bo, prefetch=pf
+                    num_select=select, score=score, criterion=criterion,
+                    block_obs=bo, prefetch=pf,
                 ).fit(NpySource(x_path, y_path)),
                 bo * cols * X.dtype.itemsize + state_bytes, repeats,
             )
@@ -105,6 +122,8 @@ def _bench_dataset(
                     f"{rec['mode']} diverged: {rec['selected']} != {base}"
                 )
             records.append(rec)
+    for r in records:
+        r["criterion"] = criterion
     return records
 
 
@@ -122,6 +141,11 @@ def main(argv=None) -> list:
     ap.add_argument("--wide-cols", type=int, default=16384)
     ap.add_argument("--wide-block-obs", default="1024,4096",
                     help="comma-separated streaming block sizes (wide case)")
+    ap.add_argument("--criterion", default="mid,miq",
+                    help="comma-separated greedy objectives; the first runs "
+                         "the full grid, the rest one tall cell each "
+                         "(largest block, last prefetch) + in-memory "
+                         "baseline")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--repeats", type=int, default=3,
                     help="timed repeats per cell (min is recorded)")
@@ -131,12 +155,23 @@ def main(argv=None) -> list:
         ap.error(f"--repeats must be >= 1, got {args.repeats}")
 
     prefetches = [int(p) for p in args.prefetch.split(",")]
+    criteria = args.criterion.split(",")
+    tall_blocks = [int(b) for b in args.block_obs.split(",")]
     with tempfile.TemporaryDirectory() as tmp:
         records = _bench_dataset(
             "tall", args.rows, args.cols, args.select,
-            [int(b) for b in args.block_obs.split(",")], prefetches,
-            args.seed, tmp, args.repeats,
+            tall_blocks, prefetches, args.seed, tmp, args.repeats,
+            criterion=criteria[0],
         )
+        for crit in criteria[1:]:
+            # One cell per extra criterion: the fold is O(N) host math per
+            # pick, so its throughput must sit within noise of the first
+            # criterion's same-block cell.
+            records += _bench_dataset(
+                "tall", args.rows, args.cols, args.select,
+                [max(tall_blocks)], prefetches[-1:], args.seed, tmp,
+                args.repeats, criterion=crit,
+            )
         if args.wide_rows > 0:
             if args.wide_rows > args.wide_cols * 0.25:
                 raise SystemExit(
@@ -146,7 +181,7 @@ def main(argv=None) -> list:
             records += _bench_dataset(
                 "wide", args.wide_rows, args.wide_cols, args.select,
                 [int(b) for b in args.wide_block_obs.split(",")], prefetches,
-                args.seed + 1, tmp, args.repeats,
+                args.seed + 1, tmp, args.repeats, criterion=criteria[0],
             )
 
     for r in records:

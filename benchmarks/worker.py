@@ -118,14 +118,14 @@ def main() -> None:
 
     # warmup (compile + first run)
     t0 = time.perf_counter()
-    sel, gains = fn(X, y)
+    sel, gains, _rel = fn(X, y)
     sel.block_until_ready()
     rec["warmup_s"] = round(time.perf_counter() - t0, 3)
 
     times = []
     for _ in range(args.repeats):
         t0 = time.perf_counter()
-        sel, gains = fn(X, y)
+        sel, gains, _rel = fn(X, y)
         sel.block_until_ready()
         times.append(time.perf_counter() - t0)
     sel_np = np.asarray(sel).tolist()

@@ -59,13 +59,43 @@ Custom scores (paper §IV.D) run through the same front door::
     from repro import CustomScore
     sel = MRMRSelector(5, score=CustomScore(get_result=my_score)).fit(X, y)
 
+Criteria
+--------
+
+The greedy *objective* is a pluggable :class:`~repro.core.criteria.
+Criterion`, orthogonal to both the score function and the encoding: the
+engines compute relevance/redundancy statistics and the criterion folds
+them into the per-candidate objective that is argmaxed.  Built-ins:
+``mid`` (the paper's difference form, Eq. 1 — the default), ``miq``
+(the quotient form) and ``maxrel`` (relevance only; the streaming engine
+then needs a single pass of I/O).  Every criterion runs on every engine,
+in-memory or streaming, and selections agree engine-for-engine::
+
+    sel = MRMRSelector(num_select=10, criterion="miq").fit(X, y)
+    sel.result_.criterion, sel.result_.engine   # ("miq", "conventional")
+    sel.scores_                                 # per-feature relevance
+    sel.ranking_                                # 1-based selection rank
+    sel.get_support()                           # boolean feature mask
+
+(CLI: ``python -m repro.launch.select --criterion miq``.)  Register your
+own fold with :func:`~repro.core.criteria.register_criterion`::
+
+    from repro import Criterion, register_criterion
+
+    @register_criterion
+    class MID2(Criterion):
+        name = "mid2x"     # then: MRMRSelector(10, criterion="mid2x")
+        ...                # init_state / update / objective (pure jnp)
+
 Layers
 ------
 
 * ``repro.core``    — the paper's contribution: ``MRMRSelector`` /
-  ``SelectionPlan`` / ``plan_selection`` on top of the four drivers
-  (reference, conventional, alternative, grid) in an open engine registry;
-  pluggable feature-score functions; incremental redundancy optimisation.
+  ``SelectionPlan`` / ``plan_selection`` on top of the five drivers
+  (reference, conventional, alternative, grid, streaming) in an open
+  engine registry; pluggable feature-score functions AND pluggable
+  selection criteria (``repro.core.criteria``); incremental fold
+  optimisation.
 * ``repro.dist``    — the distribution substrate: named meshes, logical
   sharding rules, pipeline parallelism, jax version compat.
 * ``repro.kernels`` — Pallas TPU kernels for the scoring hot spots.
@@ -76,34 +106,46 @@ Layers
 """
 
 from repro.core import (  # noqa: F401
+    Criterion,
     CustomScore,
     FeatureSelector,
+    MIDCriterion,
+    MIQCriterion,
     MIScore,
     MRMRResult,
     MRMRSelector,
+    MaxRelCriterion,
     PearsonMIScore,
     ScoreFn,
     SelectionPlan,
+    available_criteria,
     available_encodings,
     mrmr_select,
     plan_selection,
+    register_criterion,
     register_engine,
 )
 
-__version__ = "1.1.0"
+__version__ = "1.2.0"
 
 __all__ = [
+    "Criterion",
     "CustomScore",
     "FeatureSelector",
+    "MIDCriterion",
+    "MIQCriterion",
     "MIScore",
     "MRMRResult",
     "MRMRSelector",
+    "MaxRelCriterion",
     "PearsonMIScore",
     "ScoreFn",
     "SelectionPlan",
+    "available_criteria",
     "available_encodings",
     "mrmr_select",
     "plan_selection",
+    "register_criterion",
     "register_engine",
     "__version__",
 ]

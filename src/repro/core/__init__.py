@@ -1,6 +1,15 @@
 # The paper's primary contribution: distributed mRMR feature selection.
 # The front door is MRMRSelector (repro.core.selector); the driver
 # functions remain public for benchmarks and direct engine access.
+from repro.core.criteria import (  # noqa: F401
+    Criterion,
+    MIDCriterion,
+    MIQCriterion,
+    MaxRelCriterion,
+    available_criteria,
+    register_criterion,
+    resolve_criterion,
+)
 from repro.core.mrmr import (  # noqa: F401
     MRMRResult,
     make_alternative_fn,
@@ -27,6 +36,7 @@ from repro.core.selector import (  # noqa: F401
     SelectionPlan,
     available_encodings,
     build_engine_fn,
+    check_num_select,
     get_engine,
     plan_selection,
     register_engine,

@@ -1,0 +1,236 @@
+"""Composable greedy selection criteria — the fold the engines share.
+
+The paper implements exactly one greedy objective, the mRMR *difference*
+form (Eq. 1, §II): relevance minus mean pairwise redundancy.  But the
+whole family of greedy information-theoretic criteria (mRMR/MID, MIQ,
+max-relevance, JMI, CMIM, ...) shares the same distributed
+relevance/redundancy primitive — the engines already compute every
+sufficient statistic; the criteria differ only in how the per-candidate
+redundancy terms fold into an objective (Ramírez-Gallego et al., *An
+Information Theoretic Feature Selection Framework for Big Data*; Vivek &
+Sai Prasad ship quotient forms on the same vertical-partitioned
+machinery).  A :class:`Criterion` captures that fold as three jit-safe
+pure-jnp hooks:
+
+  * ``init_state(n)`` — zeroed per-candidate fold state for ``n``
+    candidates: a pytree of ``(n,)``-leading arrays (or empty), carried
+    through ``lax.fori_loop`` by the compiled engines and across passes
+    by the streaming engine.
+  * ``update(state, red_terms, l)`` — fold the ``(n,)`` redundancy terms
+    of the ``l``-th selected feature (0-based) into the state.
+  * ``objective(rel, state, l)`` — ``(n,)`` per-candidate objective given
+    the relevance vector and a state holding ``l`` folded selections.
+    The engines mask and argmax this; the distributed argmax/psum
+    structure never changes with the criterion.
+
+Engines call the hooks from inside their compiled loops (in-memory) or
+from the host-driven pass loop (streaming), so a criterion written once
+runs on every engine × regime combination.  ``needs_redundancy = False``
+(max-relevance) lets engines skip redundancy scoring entirely — the
+streaming engine then runs ONE pass of I/O over the source instead of
+``num_select`` passes.
+
+Register your own with :func:`register_criterion`::
+
+    @register_criterion
+    @dataclasses.dataclass(frozen=True)
+    class PenalisedMID(Criterion):
+        name = "mid2x"
+        def init_state(self, n):
+            return dict(red_sum=jnp.zeros((n,), jnp.float32))
+        def update(self, state, red_terms, l):
+            return dict(red_sum=state["red_sum"] + red_terms)
+        def objective(self, rel, state, l):
+            denom = jnp.maximum(l, 1).astype(jnp.float32)
+            return rel - 2.0 * state["red_sum"] / denom
+
+    MRMRSelector(num_select=10, criterion="mid2x").fit(X, y)
+
+Hooks must stay pure jnp (no host callbacks, no Python-level data
+dependence on traced values): the in-memory engines trace them once into
+``lax.fori_loop`` bodies under ``shard_map``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Quotient-form floor, in nats: mean redundancy below this is treated as
+# "no redundancy" and the candidate is ranked by pure relevance (rel/eps).
+# This does two jobs.  (1) First pick: the empty state has mean redundancy
+# 0, so iteration 0 is a relevance argmax without a divide-by-zero.
+# (2) Numerical robustness: an f32 MI value carries ~1e-7 of rounding
+# noise that differs between compiled-loop and host evaluation orders;
+# dividing by a redundancy at that scale would rank candidates by noise
+# (the classic MIQ pathology on near-independent features) and break the
+# engine-for-engine selection-identity contract.  1e-4 nats is far below
+# any meaningful dependence (a binary pair carries up to ln 2 ~ 0.69) and
+# far above the noise floor.  Plain float, not a jnp constant (import-time
+# jnp values initialise the XLA backend and lock the device count).
+_QUOTIENT_EPS = 1e-4
+
+
+class Criterion:
+    """A greedy selection objective as a jit-safe pure-jnp fold.
+
+    Subclasses set ``name`` (the registry key, reported in
+    ``MRMRResult.criterion``) and implement the three hooks below.
+    ``needs_redundancy = False`` declares that ``objective`` never reads
+    the fold state; engines then skip redundancy scoring entirely
+    (streaming: one I/O pass instead of ``num_select``).
+    """
+
+    name: str = ""
+    needs_redundancy: bool = True
+
+    def init_state(self, n: int):
+        """Zeroed fold state for ``n`` candidate features (a pytree)."""
+        raise NotImplementedError
+
+    def update(self, state, red_terms: Array, l):
+        """Fold the ``(n,)`` redundancy terms of selection ``l`` (0-based)."""
+        raise NotImplementedError
+
+    def objective(self, rel: Array, state, l) -> Array:
+        """``(n,)`` objective after ``l`` selections have been folded."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_CRITERIA: dict = {}
+
+
+def register_criterion(criterion, name: str | None = None):
+    """Register a :class:`Criterion` under its ``name`` (or ``name=``).
+
+    Accepts an instance or a zero-arg class (usable as a class decorator);
+    returns its argument unchanged.  Later registrations of the same name
+    win, mirroring :func:`repro.core.selector.register_engine`.
+    """
+    crit = criterion() if isinstance(criterion, type) else criterion
+    key = name or crit.name
+    if not key:
+        raise ValueError("criterion has no name; set .name or pass name=")
+    if crit.name != key:
+        # Keep provenance (MRMRResult.criterion) in sync with the registry
+        # key; object.__setattr__ also reaches frozen-dataclass instances.
+        object.__setattr__(crit, "name", key)
+    _CRITERIA[key] = crit
+    return criterion
+
+
+def resolve_criterion(criterion) -> Criterion:
+    """Name or instance -> Criterion instance (None -> the paper's mid)."""
+    if criterion is None:
+        return _CRITERIA["mid"]
+    if isinstance(criterion, Criterion):
+        return criterion
+    try:
+        return _CRITERIA[criterion]
+    except (KeyError, TypeError):
+        raise ValueError(
+            f"unknown criterion {criterion!r}; registered: "
+            f"{sorted(_CRITERIA)} (register_criterion adds more)"
+        ) from None
+
+
+def available_criteria() -> tuple:
+    return tuple(sorted(_CRITERIA))
+
+
+# ---------------------------------------------------------------------------
+# built-ins
+# ---------------------------------------------------------------------------
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class MIDCriterion(Criterion):
+    """Mutual-information difference — the paper's mRMR objective (Eq. 1).
+
+    ``g_k = rel_k - red_sum_k / max(l, 1)``: relevance minus mean pairwise
+    redundancy against the selected set.  This reproduces the pre-criterion
+    engines bit for bit: the fold is the exact ``red_sum`` running sum and
+    the objective the exact expression the engine bodies used to inline.
+    """
+
+    name = "mid"
+
+    def init_state(self, n: int):
+        return dict(red_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, red_terms: Array, l):
+        return dict(red_sum=state["red_sum"] + red_terms)
+
+    def objective(self, rel: Array, state, l) -> Array:
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        return rel - state["red_sum"] / denom
+
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class MIQCriterion(Criterion):
+    """Mutual-information quotient: ``g_k = rel_k / max(mean_red_k, eps)``.
+
+    The quotient form of mRMR (Ding & Peng's MIQ; the criterion family's
+    second classic).  Mean redundancy is floored at ``1e-4`` nats (see
+    ``_QUOTIENT_EPS``): below that a candidate counts as unredundant and
+    ranks by pure relevance — in particular the first pick (empty state,
+    mean redundancy 0) is a relevance argmax and its reported gain is
+    ``rel / 1e-4``.
+    """
+
+    name = "miq"
+
+    def init_state(self, n: int):
+        return dict(red_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, red_terms: Array, l):
+        return dict(red_sum=state["red_sum"] + red_terms)
+
+    def objective(self, rel: Array, state, l) -> Array:
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        red_mean = state["red_sum"] / denom
+        return rel / jnp.maximum(red_mean, jnp.float32(_QUOTIENT_EPS))
+
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class MaxRelCriterion(Criterion):
+    """Max-relevance baseline: ``g_k = rel_k``, no redundancy at all.
+
+    Selects the top-``L`` features by relevance (ties toward the smaller
+    feature id, like every engine's argmax).  ``needs_redundancy = False``
+    lets engines drop pair scoring: the streaming engine runs a single
+    relevance pass of I/O instead of ``num_select`` passes.
+    """
+
+    name = "maxrel"
+    needs_redundancy = False
+
+    def init_state(self, n: int):
+        return {}
+
+    def update(self, state, red_terms: Array, l):
+        return state
+
+    def objective(self, rel: Array, state, l) -> Array:
+        return rel
+
+
+__all__ = [
+    "Criterion",
+    "MIDCriterion",
+    "MIQCriterion",
+    "MaxRelCriterion",
+    "available_criteria",
+    "register_criterion",
+    "resolve_criterion",
+]

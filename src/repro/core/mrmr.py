@@ -16,10 +16,18 @@ The paper distributes mRMR two ways, keyed by data layout (Section III/IV):
 
 All drivers run the greedy loop as ONE compiled ``lax.fori_loop`` over
 static shapes (selected sets become masks), instead of one Spark job per
-iteration.  ``incremental=True`` carries a running redundancy sum (each
-iteration scores candidates against only the newly selected feature —
-O(N·L) total pair scores); ``incremental=False`` is the paper-faithful
-recomputation (O(N·L²)) kept as the reproduction baseline.
+iteration.  ``incremental=True`` carries the criterion's running fold
+state (each iteration scores candidates against only the newly selected
+feature — O(N·L) total pair scores); ``incremental=False`` is the
+paper-faithful recomputation (O(N·L²)) kept as the reproduction baseline.
+
+The greedy *objective* is pluggable (``criterion=``): every driver folds
+per-candidate redundancy terms through a :class:`repro.core.criteria.
+Criterion` (``init_state`` / ``update`` / ``objective``) instead of
+hard-coding the paper's difference form — ``mid`` (the default, Eq. 1),
+``miq`` (quotient) and ``maxrel`` (relevance only, skips pair scoring)
+ship built-in; the distributed argmax/psum structure is criterion-
+independent.
 """
 
 from __future__ import annotations
@@ -34,6 +42,7 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import contingency
+from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.scores import CustomScore, MIScore, ScoreFn, mi_from_counts
 from repro.dist import compat
 from repro.dist.sharding import axes_tuple as _axes_tuple
@@ -49,10 +58,29 @@ _BIG_ID = 2**31 - 1
 
 @dataclasses.dataclass
 class MRMRResult:
-    """Selection order (length L) and the mRMR gain of each pick."""
+    """Selection report: order, objective trajectory, relevance, provenance.
+
+    ``selected[l]`` is the feature picked at iteration ``l`` and
+    ``gains[l]`` the value of the criterion objective it was picked at —
+    the per-iteration objective trajectory.  ``relevance`` is the full
+    per-feature relevance vector from the fit's first scoring pass
+    (NaN-filled for :class:`~repro.core.scores.CustomScore` fits, which
+    have no relevance/redundancy decomposition; ``None`` from engines
+    predating the richer report).  ``criterion`` and ``engine`` name what
+    produced the result (empty when the producer did not say — the
+    selector backfills both from the plan).
+    """
 
     selected: Array
     gains: Array
+    relevance: Array | None = None
+    criterion: str = ""
+    engine: str = ""
+
+    @property
+    def objective_trajectory(self) -> Array:
+        """Alias of ``gains`` — the objective value of each pick."""
+        return self.gains
 
 
 # ---------------------------------------------------------------------------
@@ -93,10 +121,26 @@ def _distributed_argmax(values: Array, ids: Array, axes: tuple):
 def _loop_state(n_local: int, num_select: int):
     return dict(
         mask=jnp.zeros((n_local,), jnp.bool_),
-        red_sum=jnp.zeros((n_local,), jnp.float32),
         selected=jnp.full((num_select,), -1, jnp.int32),
         gains=jnp.zeros((num_select,), jnp.float32),
     )
+
+
+def _check_custom_criterion(score: ScoreFn, crit: Criterion) -> None:
+    """CustomScore computes the complete objective itself (Listing 7), so
+    it bypasses the criterion fold; any non-default criterion would be
+    silently ignored — fail instead."""
+    if isinstance(score, CustomScore) and crit.name != "mid":
+        raise ValueError(
+            f"criterion {crit.name!r} cannot be combined with CustomScore: "
+            "a custom get_result computes the complete objective itself "
+            "(paper Listing 7); use the default 'mid' criterion"
+        )
+
+
+def _nan_relevance(n: int) -> Array:
+    """Relevance placeholder for CustomScore fits (no rel/red split)."""
+    return jnp.full((n,), jnp.nan, jnp.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -110,11 +154,15 @@ def mrmr_reference(
     score: ScoreFn,
     *,
     incremental: bool = True,
+    criterion: Criterion | str = "mid",
 ) -> MRMRResult:
     """Pure-jnp mRMR on one device. ``X_rows`` is feature-major (N, M)."""
+    crit = resolve_criterion(criterion)
+    _check_custom_criterion(score, crit)
     n, m = X_rows.shape
     custom = isinstance(score, CustomScore)
     use_incr = incremental and score.incremental_safe and not custom
+    fold = crit.needs_redundancy and not custom
 
     rel = None if custom else score.relevance(X_rows, y)
     state = _loop_state(n, num_select)
@@ -122,19 +170,24 @@ def mrmr_reference(
     # alternative body (whose psum-gathered rows are always f32).
     sel_dtype = jnp.float32 if custom else X_rows.dtype
     state["sel_rows"] = jnp.zeros((num_select, m), sel_dtype)
+    if use_incr and fold:
+        state["crit"] = crit.init_state(n)
 
     def body(l, st):
-        denom = jnp.maximum(l, 1).astype(jnp.float32)
         if custom:
             g = score.full_score(X_rows, y, st["sel_rows"], l)
+        elif not fold:
+            g = crit.objective(rel, crit.init_state(n), l)
         elif use_incr:
-            g = rel - st["red_sum"] / denom
+            g = crit.objective(rel, st["crit"], l)
         else:
-            def inner(j, acc):
-                return acc + score.redundancy(X_rows, st["sel_rows"][j])
+            def inner(j, cs):
+                return crit.update(
+                    cs, score.redundancy(X_rows, st["sel_rows"][j]), j
+                )
 
-            red = lax.fori_loop(0, l, inner, jnp.zeros((n,), jnp.float32))
-            g = rel - red / denom
+            cs = lax.fori_loop(0, l, inner, crit.init_state(n))
+            g = crit.objective(rel, cs, l)
         g = jnp.where(st["mask"], _NEG_INF, g)
         k = jnp.argmax(g)
         xk = X_rows[k]
@@ -145,12 +198,18 @@ def mrmr_reference(
         st["sel_rows"] = lax.dynamic_update_slice(
             st["sel_rows"], xk[None].astype(sel_dtype), (l, 0)
         )
-        if use_incr:
-            st["red_sum"] = st["red_sum"] + score.redundancy(X_rows, xk)
+        if use_incr and fold:
+            st["crit"] = crit.update(st["crit"], score.redundancy(X_rows, xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
-    return MRMRResult(selected=state["selected"], gains=state["gains"])
+    return MRMRResult(
+        selected=state["selected"],
+        gains=state["gains"],
+        relevance=_nan_relevance(n) if custom else rel.astype(jnp.float32),
+        criterion=crit.name,
+        engine="reference",
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +222,7 @@ def _conventional_body(
     *,
     num_select: int,
     score: MIScore,
+    criterion: Criterion,
     obs_axes: tuple,
     incremental: bool,
     block: int,
@@ -171,6 +231,7 @@ def _conventional_body(
 ):
     n = X_loc.shape[1]
     v, c = score.num_values, score.num_classes
+    crit = criterion
 
     def counts_vs(tgt_loc: Array, vy: int) -> Array:
         """Local map+combine, then the reduce: one psum over the obs axes."""
@@ -181,38 +242,47 @@ def _conventional_body(
 
     rel = mi_from_counts(counts_vs(y_loc, c))  # (N,) replicated
     state = _loop_state(n, num_select)
+    if incremental and crit.needs_redundancy:
+        state["crit"] = crit.init_state(n)
+
     # Selected *column indices* stand in for the paper's broadcast tables.
     def body(l, st):
-        denom = jnp.maximum(l, 1).astype(jnp.float32)
-        if incremental:
-            g = rel - st["red_sum"] / denom
+        if not crit.needs_redundancy:
+            g = crit.objective(rel, crit.init_state(n), l)
+        elif incremental:
+            g = crit.objective(rel, st["crit"], l)
         else:
             # static_inner trades the data-dependent trip count (paper: l-1
             # passes at step l) for a fixed L-pass masked loop, so the
             # dry-run HLO carries the recompute cost explicitly.
-            def inner(j, acc):
+            def inner(j, cs):
                 xj = jnp.take(X_loc, st["selected"][j], axis=1)
                 mi = mi_from_counts(counts_vs(xj, v))
+                folded = crit.update(cs, mi, j)
                 if static_inner:
-                    mi = jnp.where(j < l, mi, 0.0)
-                return acc + mi
+                    # Fold unconditionally (the dry-run carries the cost),
+                    # keep the state only for the real j < l iterations.
+                    return jax.tree.map(
+                        lambda a, b: jnp.where(j < l, b, a), cs, folded
+                    )
+                return folded
 
             hi = num_select if static_inner else l
-            red = lax.fori_loop(0, hi, inner, jnp.zeros((n,), jnp.float32))
-            g = rel - red / denom
+            cs = lax.fori_loop(0, hi, inner, crit.init_state(n))
+            g = crit.objective(rel, cs, l)
         g = jnp.where(st["mask"], _NEG_INF, g)
         k = jnp.argmax(g).astype(jnp.int32)
         st = dict(st)
         st["mask"] = st["mask"].at[k].set(True)
         st["selected"] = st["selected"].at[l].set(k)
         st["gains"] = st["gains"].at[l].set(g[k])
-        if incremental:
+        if incremental and crit.needs_redundancy:
             xk = jnp.take(X_loc, k, axis=1)
-            st["red_sum"] = st["red_sum"] + mi_from_counts(counts_vs(xk, v))
+            st["crit"] = crit.update(st["crit"], mi_from_counts(counts_vs(xk, v)), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
-    return state["selected"], state["gains"]
+    return state["selected"], state["gains"], rel
 
 
 def mrmr_conventional(
@@ -225,6 +295,7 @@ def mrmr_conventional(
     obs_axes=("data",),
     incremental: bool = True,
     block: int = 64,
+    criterion: Criterion | str = "mid",
 ) -> MRMRResult:
     """Paper's conventional-encoding MapReduce job on a device mesh.
 
@@ -232,12 +303,14 @@ def mrmr_conventional(
     tables are locally combined and globally summed with one all-reduce per
     scoring pass — the MapReduce shuffle collapsed onto the ICI ring.
     """
+    crit = resolve_criterion(criterion)
     fn = make_conventional_fn(
         num_select, score, mesh=mesh, obs_axes=obs_axes,
-        incremental=incremental, block=block,
+        incremental=incremental, block=block, criterion=crit,
     )
-    sel, gains = fn(X, y)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(X, y)
+    return MRMRResult(sel, gains, relevance=rel, criterion=crit.name,
+                      engine="conventional")
 
 
 def make_conventional_fn(
@@ -250,8 +323,10 @@ def make_conventional_fn(
     block: int = 64,
     onehot_dtype=jnp.bfloat16,
     static_inner: bool = False,
+    criterion: Criterion | str = "mid",
 ):
-    """Jitted (X, y) -> (selected, gains) for the conventional encoding.
+    """Jitted (X, y) -> (selected, gains, relevance) for the conventional
+    encoding.
 
     Exposed separately so benchmarks can ``.lower().compile()`` the job and
     run the same HLO collective analysis as the LM dry-run cells.
@@ -264,6 +339,7 @@ def make_conventional_fn(
     kwargs = dict(
         num_select=num_select,
         score=score,
+        criterion=resolve_criterion(criterion),
         incremental=incremental,
         block=block,
         onehot_dtype=onehot_dtype,
@@ -294,22 +370,27 @@ def _alternative_body(
     num_select: int,
     n_features: int,
     score: ScoreFn,
+    criterion: Criterion,
     feat_axes: tuple,
     axis_sizes: dict,
     incremental: bool,
 ):
     n_loc, m = X_loc.shape
+    crit = criterion
     shard = _flat_axis_index(feat_axes, axis_sizes) if feat_axes else jnp.int32(0)
     ids = shard * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
     valid = ids < n_features
     custom = isinstance(score, CustomScore)
     use_incr = incremental and score.incremental_safe and not custom
+    fold = crit.needs_redundancy and not custom
 
     rel = None if custom else score.relevance(X_loc, y)
     state = _loop_state(n_loc, num_select)
-    # mask/red_sum are per-shard slices -> varying along the feature axes.
+    # mask and the criterion's fold state are per-shard slices -> varying
+    # along the feature axes.
     state["mask"] = _pvary(state["mask"], feat_axes)
-    state["red_sum"] = _pvary(state["red_sum"], feat_axes)
+    if use_incr and fold:
+        state["crit"] = _pvary(crit.init_state(n_loc), feat_axes)
     # The paper's broadcast v_s: replicated buffer of selected feature rows.
     state["sel_rows"] = jnp.zeros((num_select, m), jnp.float32)
 
@@ -320,18 +401,21 @@ def _alternative_body(
         return lax.psum(row, feat_axes) if feat_axes else row
 
     def body(l, st):
-        denom = jnp.maximum(l, 1).astype(jnp.float32)
         if custom:
             g = score.full_score(X_loc, y, st["sel_rows"], l)
+        elif not fold:
+            g = crit.objective(rel, _pvary(crit.init_state(n_loc), feat_axes), l)
         elif use_incr:
-            g = rel - st["red_sum"] / denom
+            g = crit.objective(rel, st["crit"], l)
         else:
-            def inner(j, acc):
-                return acc + score.redundancy(X_loc, st["sel_rows"][j])
+            def inner(j, cs):
+                return crit.update(
+                    cs, score.redundancy(X_loc, st["sel_rows"][j]), j
+                )
 
-            red0 = _pvary(jnp.zeros((n_loc,), jnp.float32), feat_axes)
-            red = lax.fori_loop(0, l, inner, red0)
-            g = rel - red / denom
+            cs0 = _pvary(crit.init_state(n_loc), feat_axes)
+            cs = lax.fori_loop(0, l, inner, cs0)
+            g = crit.objective(rel, cs, l)
         g = jnp.where(st["mask"] | ~valid, _NEG_INF, g)
         k, best = _distributed_argmax(g, ids, feat_axes)
         xk = fetch_row(k)
@@ -340,12 +424,13 @@ def _alternative_body(
         st["selected"] = st["selected"].at[l].set(k)
         st["gains"] = st["gains"].at[l].set(best)
         st["sel_rows"] = lax.dynamic_update_slice(st["sel_rows"], xk[None], (l, 0))
-        if use_incr:
-            st["red_sum"] = st["red_sum"] + score.redundancy(X_loc, xk)
+        if use_incr and fold:
+            st["crit"] = crit.update(st["crit"], score.redundancy(X_loc, xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
-    return state["selected"], state["gains"]
+    rel_out = _nan_relevance(n_loc) if custom else rel.astype(jnp.float32)
+    return state["selected"], state["gains"], rel_out
 
 
 def mrmr_alternative(
@@ -358,15 +443,18 @@ def mrmr_alternative(
     feat_axes=("model",),
     incremental: bool = True,
     n_features: int | None = None,
+    criterion: Criterion | str = "mid",
 ) -> MRMRResult:
     """Paper's alternative-encoding job: feature-sharded, map-only scoring."""
+    crit = resolve_criterion(criterion)
     n_features = int(n_features if n_features is not None else X_rows.shape[0])
     fn = make_alternative_fn(
         num_select, score, n_features, mesh=mesh, feat_axes=feat_axes,
-        incremental=incremental,
+        incremental=incremental, criterion=crit,
     )
-    sel, gains = fn(X_rows, y)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(X_rows, y)
+    return MRMRResult(sel, gains, relevance=rel[:n_features],
+                      criterion=crit.name, engine="alternative")
 
 
 def make_alternative_fn(
@@ -377,12 +465,18 @@ def make_alternative_fn(
     mesh: Mesh | None = None,
     feat_axes=("model",),
     incremental: bool = True,
+    criterion: Criterion | str = "mid",
 ):
-    """Jitted (X_rows, y) -> (selected, gains) for the alternative encoding."""
+    """Jitted (X_rows, y) -> (selected, gains, relevance) for the
+    alternative encoding.  The relevance output covers the PADDED feature
+    extent (callers slice ``[:n_features]``)."""
+    crit = resolve_criterion(criterion)
+    _check_custom_criterion(score, crit)
     kwargs = dict(
         num_select=num_select,
         n_features=int(n_features),
         score=score,
+        criterion=crit,
         incremental=incremental,
     )
     if mesh is None:
@@ -401,7 +495,9 @@ def make_alternative_fn(
             body,
             mesh=mesh,
             in_specs=(P(feat_axes, None), P()),
-            out_specs=P(),
+            # selected/gains replicate; the relevance slices concatenate
+            # back to the (padded) global feature extent.
+            out_specs=(P(), P(), P(feat_axes)),
         )
     )
 
@@ -417,6 +513,7 @@ def _grid_body(
     num_select: int,
     n_features: int,
     score: MIScore,
+    criterion: Criterion,
     obs_axes: tuple,
     feat_axes: tuple,
     axis_sizes: dict,
@@ -425,6 +522,7 @@ def _grid_body(
 ):
     m_loc, n_loc = X_loc.shape
     v, c = score.num_values, score.num_classes
+    crit = criterion
     shard = _flat_axis_index(feat_axes, axis_sizes) if feat_axes else jnp.int32(0)
     ids = shard * n_loc + jnp.arange(n_loc, dtype=jnp.int32)
     valid = ids < n_features
@@ -445,33 +543,35 @@ def _grid_body(
     rel = mi_from_counts(counts_vs(y_loc, c))
     state = _loop_state(n_loc, num_select)
     state["mask"] = _pvary(state["mask"], feat_axes)
-    state["red_sum"] = _pvary(state["red_sum"], feat_axes)
+    if incremental and crit.needs_redundancy:
+        state["crit"] = _pvary(crit.init_state(n_loc), feat_axes)
 
     def body(l, st):
-        denom = jnp.maximum(l, 1).astype(jnp.float32)
-        if incremental:
-            g = rel - st["red_sum"] / denom
+        if not crit.needs_redundancy:
+            g = crit.objective(rel, _pvary(crit.init_state(n_loc), feat_axes), l)
+        elif incremental:
+            g = crit.objective(rel, st["crit"], l)
         else:
-            def inner(j, acc):
+            def inner(j, cs):
                 xj = fetch_col(st["selected"][j])
-                return acc + mi_from_counts(counts_vs(xj, v))
+                return crit.update(cs, mi_from_counts(counts_vs(xj, v)), j)
 
-            red0 = _pvary(jnp.zeros((n_loc,), jnp.float32), feat_axes)
-            red = lax.fori_loop(0, l, inner, red0)
-            g = rel - red / denom
+            cs0 = _pvary(crit.init_state(n_loc), feat_axes)
+            cs = lax.fori_loop(0, l, inner, cs0)
+            g = crit.objective(rel, cs, l)
         g = jnp.where(st["mask"] | ~valid, _NEG_INF, g)
         k, best = _distributed_argmax(g, ids, feat_axes)
         st = dict(st)
         st["mask"] = st["mask"] | (ids == k)
         st["selected"] = st["selected"].at[l].set(k)
         st["gains"] = st["gains"].at[l].set(best)
-        if incremental:
+        if incremental and crit.needs_redundancy:
             xk = fetch_col(k)
-            st["red_sum"] = st["red_sum"] + mi_from_counts(counts_vs(xk, v))
+            st["crit"] = crit.update(st["crit"], mi_from_counts(counts_vs(xk, v)), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
-    return state["selected"], state["gains"]
+    return state["selected"], state["gains"], rel
 
 
 def mrmr_grid(
@@ -486,15 +586,19 @@ def mrmr_grid(
     incremental: bool = True,
     block: int = 64,
     n_features: int | None = None,
+    criterion: Criterion | str = "mid",
 ) -> MRMRResult:
     """2-D sharded mRMR: observation axes × feature axes (beyond paper)."""
+    crit = resolve_criterion(criterion)
     n_features = int(n_features if n_features is not None else X.shape[1])
     fn = make_grid_fn(
         num_select, score, n_features, mesh=mesh, obs_axes=obs_axes,
         feat_axes=feat_axes, incremental=incremental, block=block,
+        criterion=crit,
     )
-    sel, gains = fn(X, y)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(X, y)
+    return MRMRResult(sel, gains, relevance=rel[:n_features],
+                      criterion=crit.name, engine="grid")
 
 
 def make_grid_fn(
@@ -507,8 +611,10 @@ def make_grid_fn(
     feat_axes=("model",),
     incremental: bool = True,
     block: int = 64,
+    criterion: Criterion | str = "mid",
 ):
-    """Jitted (X, y) -> (selected, gains) for the grid encoding."""
+    """Jitted (X, y) -> (selected, gains, relevance) for the grid encoding.
+    The relevance output covers the PADDED feature extent."""
     if not isinstance(score, MIScore):
         raise ValueError("grid encoding is discrete/MI only")
     obs_axes, feat_axes = _axes_tuple(obs_axes), _axes_tuple(feat_axes)
@@ -518,6 +624,7 @@ def make_grid_fn(
         num_select=num_select,
         n_features=int(n_features),
         score=score,
+        criterion=resolve_criterion(criterion),
         obs_axes=obs_axes,
         feat_axes=feat_axes,
         axis_sizes=axis_sizes,
@@ -529,6 +636,6 @@ def make_grid_fn(
             body,
             mesh=mesh,
             in_specs=(P(obs_axes, feat_axes), P(obs_axes)),
-            out_specs=P(),
+            out_specs=(P(), P(), P(feat_axes)),
         )
     )

@@ -36,6 +36,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mrmr as mrmr_mod
+from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.mrmr import MRMRResult
 from repro.core.scores import MIScore, PearsonMIScore, ScoreFn, _OOR
 from repro.data.sources import ArraySource, DataSource
@@ -54,13 +55,29 @@ GRID_MIN_DIM = 512    # both dims at least this before a grid pays off
 GRID_MIN_DEVICES = 4  # a 2-D mesh needs at least a 2x2 factorisation
 
 
+def check_num_select(num_select, n_features: int) -> None:
+    """Shared fit-time bounds check: ``1 <= num_select <= num_features``.
+
+    Raised by the front door (both array and DataSource paths) and the
+    streaming driver, so an oversized ask fails with one clear message
+    instead of an opaque shape error deep inside an engine loop.
+    """
+    if not 1 <= int(num_select) <= n_features:
+        raise ValueError(
+            f"num_select={num_select} out of range: need "
+            f"1 <= num_select <= num_features ({n_features})"
+        )
+
+
 @dataclasses.dataclass(frozen=True)
 class SelectionPlan:
     """Resolved distribution strategy for one ``fit``.
 
     ``mesh_shape`` aligns with ``obs_axes + feat_axes``; empty means run
     unsharded.  ``score=None`` means "resolve from the data at fit time"
-    (discrete -> exact MI, continuous -> Pearson-MI).
+    (discrete -> exact MI, continuous -> Pearson-MI).  ``criterion`` is
+    the greedy objective — a registered name or a
+    :class:`~repro.core.criteria.Criterion` instance (resolved at use).
     """
 
     encoding: str                     # reference|conventional|alternative|grid|streaming
@@ -68,7 +85,7 @@ class SelectionPlan:
     feat_axes: tuple = ()             # mesh axes sharding features
     mesh_shape: tuple = ()            # extents, aligned with mesh_axes
     block: int = 64                   # contingency feature-block size
-    incremental: bool = True          # running redundancy sum vs recompute
+    incremental: bool = True          # running criterion fold vs recompute
     score: ScoreFn | None = None      # score spec (None = auto from data)
     onehot_dtype: str = "bfloat16"    # contingency one-hot storage dtype
     static_inner: bool = False        # fixed-trip recompute loop (dry-run)
@@ -76,6 +93,8 @@ class SelectionPlan:
                                       # block (rounded up to the obs extent)
     prefetch: int = 2                 # streaming: blocks placed ahead of
                                       # device accumulation (0 = synchronous)
+    criterion: object = "mid"         # greedy objective (name or Criterion);
+                                      # appended last for positional compat
 
     @property
     def mesh_axes(self) -> tuple:
@@ -129,6 +148,7 @@ def plan_selection(
     feat_axes: Sequence[str] | str = ("model",),
     incremental: bool = True,
     block: int = 64,
+    criterion: Criterion | str = "mid",
 ) -> SelectionPlan:
     """Pick encoding + mesh for a dataset shape (paper §III).
 
@@ -138,7 +158,10 @@ def plan_selection(
         is then constrained to its axes), or None for all local devices.
       score: the score spec.  Non-MI scores force the alternative encoding
         (the only map-only layout that supports arbitrary scores, §IV.D).
+      criterion: greedy objective name or Criterion — orthogonal to the
+        encoding choice; recorded on the plan for the engines.
     """
+    criterion = resolve_criterion(criterion)
     m, n = int(shape[0]), int(shape[1])
     obs_axes, feat_axes = _axes_tuple(obs_axes), _axes_tuple(feat_axes)
     n_dev = _device_count(devices)
@@ -163,7 +186,8 @@ def plan_selection(
     else:
         encoding = "alternative"
 
-    common = dict(block=block, incremental=incremental, score=score)
+    common = dict(block=block, incremental=incremental, score=score,
+                  criterion=criterion)
     if n_dev <= 1 and mesh is None:
         # Single device: encoding still follows the shape (the drivers run
         # unsharded), so plans are stable as the fleet scales.
@@ -253,22 +277,26 @@ def available_encodings() -> tuple:
 def build_engine_fn(
     plan: SelectionPlan, mesh: Mesh | None, num_select: int, n_features: int
 ):
-    """Jitted (X, y) -> (selected, gains) in the engine's NATIVE layout.
+    """Jitted (X, y) -> (selected, gains, relevance) in the engine's
+    NATIVE layout.
 
     Native layouts: conventional/grid take (obs, feat) [padded to mesh
     divisibility]; reference/alternative take feature-major (feat, obs).
+    The relevance output covers the engine's (padded) feature extent.
     Benchmarks use this directly to ``.lower().compile()`` the exact job
     the selector would run.
     """
     enc, score = plan.encoding, plan.score
+    crit = resolve_criterion(plan.criterion)
     oh_dt = jnp.dtype(plan.onehot_dtype)
     if enc == "reference":
 
         def ref_fn(Xr, y):
             res = mrmr_mod.mrmr_reference(
-                Xr, y, num_select, score, incremental=plan.incremental
+                Xr, y, num_select, score, incremental=plan.incremental,
+                criterion=crit,
             )
-            return res.selected, res.gains
+            return res.selected, res.gains, res.relevance
 
         return jax.jit(ref_fn)
     if enc == "conventional":
@@ -276,11 +304,13 @@ def build_engine_fn(
             num_select, score, mesh=mesh, obs_axes=plan.obs_axes,
             incremental=plan.incremental, block=plan.block,
             onehot_dtype=oh_dt, static_inner=plan.static_inner,
+            criterion=crit,
         )
     if enc == "alternative":
         return mrmr_mod.make_alternative_fn(
             num_select, score, n_features, mesh=mesh,
             feat_axes=plan.feat_axes, incremental=plan.incremental,
+            criterion=crit,
         )
     if enc == "grid":
         if mesh is None:
@@ -289,6 +319,7 @@ def build_engine_fn(
             num_select, score, n_features, mesh=mesh,
             obs_axes=plan.obs_axes, feat_axes=plan.feat_axes,
             incremental=plan.incremental, block=plan.block,
+            criterion=crit,
         )
     raise ValueError(f"unknown encoding {enc!r}")
 
@@ -312,12 +343,20 @@ def _place(x: Array, mesh: Mesh | None, spec: P) -> Array:
 # the one padding sentinel shared by the in-memory and streaming paths.
 
 
+def _result(plan: SelectionPlan, engine: str, sel, gains, rel, n: int):
+    """Assemble the rich result: slice feature padding off the relevance."""
+    return MRMRResult(
+        sel, gains, relevance=rel[:n],
+        criterion=resolve_criterion(plan.criterion).name, engine=engine,
+    )
+
+
 @register_engine("reference")
 def _fit_reference(X, y, *, num_select, plan, mesh) -> MRMRResult:
     del mesh
     res = mrmr_mod.mrmr_reference(
         jnp.asarray(X).T, y, num_select, plan.score,
-        incremental=plan.incremental,
+        incremental=plan.incremental, criterion=plan.criterion,
     )
     return res
 
@@ -332,8 +371,8 @@ def _fit_conventional(X, y, *, num_select, plan, mesh) -> MRMRResult:
     Xp = _place(Xp, mesh, P(plan.obs_axes, None))
     yp = _place(yp, mesh, P(plan.obs_axes))
     fn = build_engine_fn(plan, mesh, num_select, X.shape[1])
-    sel, gains = fn(Xp, yp)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(Xp, yp)
+    return _result(plan, "conventional", sel, gains, rel, X.shape[1])
 
 
 @register_engine("alternative")
@@ -346,8 +385,8 @@ def _fit_alternative(X, y, *, num_select, plan, mesh) -> MRMRResult:
     Xr = _place(Xr, mesh, P(plan.feat_axes, None))
     yb = _place(y, mesh, P())
     fn = build_engine_fn(plan, mesh, num_select, n)
-    sel, gains = fn(Xr, yb)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(Xr, yb)
+    return _result(plan, "alternative", sel, gains, rel, n)
 
 
 @register_engine("grid")
@@ -363,8 +402,8 @@ def _fit_grid(X, y, *, num_select, plan, mesh) -> MRMRResult:
     Xp = _place(Xp, mesh, P(plan.obs_axes, plan.feat_axes))
     yp = _place(yp, mesh, P(plan.obs_axes))
     fn = build_engine_fn(plan, mesh, num_select, n)
-    sel, gains = fn(Xp, yp)
-    return MRMRResult(sel, gains)
+    sel, gains, rel = fn(Xp, yp)
+    return _result(plan, "grid", sel, gains, rel, n)
 
 
 # ---------------------------------------------------------------------------
@@ -386,13 +425,28 @@ class MRMRSelector:
     ``fit(NpySource("X.npy", "y.npy"))`` — and the ``"streaming"`` engine
     runs the selection block-by-block with peak device memory bounded by
     ``block_obs`` rows instead of ``num_obs`` (the streaming engine always
-    uses the running-sum redundancy formulation; selections are identical
-    to the recompute baseline for the built-in scores).
+    uses the running criterion fold; selections are identical to the
+    recompute baseline for the built-in scores).
+
+    After a fit the selector exposes the sklearn-style read side:
+    ``selected_`` (ids in pick order), ``gains_`` (the per-iteration
+    objective trajectory), ``scores_`` (the per-feature relevance vector;
+    NaN for CustomScore fits, None for custom engines that predate the
+    rich report), ``ranking_`` (1-based selection rank, unselected
+    features share rank ``num_select + 1``), ``get_support()`` (boolean
+    mask, or ascending indices with ``indices=True``) and ``result_``
+    (the full :class:`~repro.core.mrmr.MRMRResult` report).
 
     Args:
-      num_select: L, number of features to pick.
+      num_select: L, number of features to pick; must satisfy
+        ``1 <= num_select <= num_features`` (checked at fit time).
       score: a ``ScoreFn``; None resolves from the data (discrete -> exact
         MI with inferred cardinalities, continuous -> Pearson-MI).
+      criterion: the greedy objective — a registered name (``"mid"`` the
+        paper's difference form, ``"miq"`` quotient, ``"maxrel"``
+        relevance-only) or a :class:`~repro.core.criteria.Criterion`
+        instance.  Orthogonal to ``encoding``: any criterion runs on any
+        engine, in-memory or streaming.
       encoding: "auto" (paper §III rule via ``plan_selection``) or one of
         ``available_encodings()``.
       mesh: an existing device mesh to run on; None lets the planner build
@@ -402,7 +456,8 @@ class MRMRSelector:
       obs_axes / feat_axes: mesh axis names for observation / feature
         sharding (intersected with the mesh's axes).
       incremental: False reproduces the paper's per-iteration redundancy
-        recomputation; True keeps a running sum (identical selections).
+        recomputation; True carries the criterion's running fold state
+        (identical selections).
       block: contingency feature-block size.
       block_obs: observations per streaming block (``DataSource`` fits) —
         the peak-device-memory knob; larger blocks amortise dispatch and
@@ -432,9 +487,16 @@ class MRMRSelector:
     block: int = 64
     block_obs: int = 65536
     prefetch: int = 2
+    # appended after the pre-1.2 fields so positional construction keeps
+    # its old meaning
+    criterion: Criterion | str = "mid"
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
+    scores_: np.ndarray | None = None
+    ranking_: np.ndarray | None = None
+    result_: MRMRResult | None = None
+    n_features_in_: int | None = None
     plan_: SelectionPlan | None = None
     mesh_: Mesh | None = None
 
@@ -467,6 +529,7 @@ class MRMRSelector:
                 shape, devices, score,
                 obs_axes=self.obs_axes, feat_axes=self.feat_axes,
                 incremental=self.incremental, block=self.block,
+                criterion=self.criterion,
             )
         obs = _axes_tuple(self.obs_axes)
         feat = _axes_tuple(self.feat_axes)
@@ -510,6 +573,7 @@ class MRMRSelector:
             encoding=self.encoding, obs_axes=axes[0], feat_axes=axes[1],
             mesh_shape=shape_of, block=self.block,
             incremental=self.incremental, score=score,
+            criterion=resolve_criterion(self.criterion),
         )
 
     def _resolve_mesh(self, plan: SelectionPlan) -> Mesh | None:
@@ -578,13 +642,54 @@ class MRMRSelector:
         block_obs = effective_block_obs(
             self.block_obs, math.prod(shape[: len(obs)]) if obs else 1
         )
-        # Streaming always uses the running-sum redundancy: the recompute
+        # Streaming always uses the running criterion fold: the recompute
         # baseline would multiply the number of passes over the data by L.
         return SelectionPlan(
             encoding="streaming", obs_axes=obs, feat_axes=feat,
             mesh_shape=shape, block=self.block, block_obs=block_obs,
             incremental=True, prefetch=self.prefetch, score=score,
+            criterion=resolve_criterion(self.criterion),
         )
+
+    def _finish_fit(
+        self, res: MRMRResult, plan: SelectionPlan, mesh: Mesh | None,
+        n_features: int,
+    ) -> "MRMRSelector":
+        """Populate the read side from an engine's result (every fit path)."""
+        # Custom-registered engines may omit provenance: backfill both the
+        # engine and the criterion from the plan that drove the fit.
+        if not res.engine:
+            res = dataclasses.replace(res, engine=plan.encoding)
+        if not res.criterion:
+            res = dataclasses.replace(
+                res, criterion=resolve_criterion(plan.criterion).name
+            )
+        self.selected_ = np.asarray(res.selected)
+        self.gains_ = np.asarray(res.gains)
+        self.scores_ = (
+            None if res.relevance is None else np.asarray(res.relevance)
+        )
+        ranking = np.full((n_features,), len(self.selected_) + 1, np.int32)
+        ranking[self.selected_] = np.arange(1, len(self.selected_) + 1)
+        self.ranking_ = ranking
+        self.n_features_in_ = int(n_features)
+        self.result_ = res
+        self.plan_ = plan
+        self.mesh_ = mesh
+        return self
+
+    def get_support(self, indices: bool = False) -> np.ndarray:
+        """Selected-feature mask (or ascending indices), sklearn-style.
+
+        ``indices=False`` returns a ``(num_features,)`` boolean mask;
+        ``indices=True`` the selected ids in ASCENDING order (use
+        ``selected_`` for selection order).
+        """
+        if self.selected_ is None or self.n_features_in_ is None:
+            raise RuntimeError("fit() first")
+        mask = np.zeros((self.n_features_in_,), bool)
+        mask[self.selected_] = True
+        return np.flatnonzero(mask) if indices else mask
 
     def _fit_source(self, source: DataSource) -> "MRMRSelector":
         if self.encoding not in ("auto", "streaming"):
@@ -593,22 +698,14 @@ class MRMRSelector:
                 "DataSource inputs run the 'streaming' engine "
                 "(materialise the source yourself to force another engine)"
             )
-        if not 0 < self.num_select <= source.num_features:
-            raise ValueError(
-                f"num_select={self.num_select} out of range for "
-                f"{source.num_features} features"
-            )
+        check_num_select(self.num_select, source.num_features)
         score = self._resolve_source_score(source)
         plan = self._resolve_stream_plan(source, score)
         mesh = self._resolve_mesh(plan)
         engine = get_engine("streaming")
         res = engine(source, None, num_select=self.num_select, plan=plan,
                      mesh=mesh)
-        self.selected_ = np.asarray(res.selected)
-        self.gains_ = np.asarray(res.gains)
-        self.plan_ = plan
-        self.mesh_ = mesh
-        return self
+        return self._finish_fit(res, plan, mesh, source.num_features)
 
     def fit(self, X, y=None) -> "MRMRSelector":
         """X: (observations, features) array + y: (observations,) targets,
@@ -636,11 +733,7 @@ class MRMRSelector:
         y = jnp.asarray(y)
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
             raise ValueError(f"bad shapes X{X.shape} y{y.shape}")
-        if not 0 < self.num_select <= X.shape[1]:
-            raise ValueError(
-                f"num_select={self.num_select} out of range for "
-                f"{X.shape[1]} features"
-            )
+        check_num_select(self.num_select, X.shape[1])
         score = self._resolve_score(X, y)
         # Discrete MI scores need integral class labels; every other score
         # (Pearson, custom) keeps continuous targets intact.
@@ -651,11 +744,7 @@ class MRMRSelector:
         mesh = self._resolve_mesh(plan)
         engine = get_engine(plan.encoding)
         res = engine(X, y, num_select=self.num_select, plan=plan, mesh=mesh)
-        self.selected_ = np.asarray(res.selected)
-        self.gains_ = np.asarray(res.gains)
-        self.plan_ = plan
-        self.mesh_ = mesh
-        return self
+        return self._finish_fit(res, plan, mesh, X.shape[1])
 
     def transform(self, X):
         """Selected columns of ``X``, ordered by selection rank.
@@ -678,6 +767,7 @@ class MRMRSelector:
 __all__ = [
     "MRMRSelector",
     "SelectionPlan",
+    "check_num_select",
     "plan_selection",
     "register_engine",
     "get_engine",

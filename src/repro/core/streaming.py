@@ -10,13 +10,18 @@ all-reduce when blocks are sharded).  The greedy loop is host-driven:
 
     pass 0:        relevance statistics vs the class   -> rel (N,)
     pick l, then:  statistics of ALL features vs the just-selected column
-                   (read from the same blocks, no column cache) -> red += …
+                   (read from the same blocks, no column cache), folded
+                   into the criterion's running state
 
 Total I/O is ``L`` passes over the source (1 relevance + L-1 redundancy,
-the running-sum formulation — selections identical to the paper's
+the running-fold formulation — selections identical to the paper's
 recompute, as with the in-memory engines) while peak device memory is
 ``O(block_obs × N)`` for the block plus the statistics state,
-independent of ``num_obs``.
+independent of ``num_obs``.  The greedy objective is pluggable
+(``criterion=`` — ``mid``/``miq``/``maxrel`` or anything registered via
+:func:`repro.core.criteria.register_criterion`); a criterion that
+declares ``needs_redundancy = False`` (``maxrel``) collapses the whole
+fit to ONE relevance pass of I/O.
 
 Both of the paper's §III regimes stream:
 
@@ -42,9 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.mrmr import MRMRResult
 from repro.core.scores import ScoreFn
-from repro.core.selector import register_engine
+from repro.core.selector import check_num_select, register_engine
 from repro.data.sources import DataSource, as_source
 from repro.dist.streaming import BlockPlacer, PrefetchPlacer
 
@@ -99,6 +105,7 @@ def mrmr_streaming(
     obs_axes=("data",),
     feat_axes=(),
     prefetch: int = 2,
+    criterion: Criterion | str = "mid",
 ) -> MRMRResult:
     """Greedy mRMR over a :class:`~repro.data.sources.DataSource`.
 
@@ -115,7 +122,12 @@ def mrmr_streaming(
         block, the paper's reducer on the ICI ring.
       prefetch: host blocks to read/pad/place ahead of device
         accumulation (0 = synchronous placement).
+      criterion: greedy objective — a name (``"mid"``/``"miq"``/
+        ``"maxrel"``) or :class:`~repro.core.criteria.Criterion`.  The
+        fold runs on the same (N,)-sized vectors the in-memory engines
+        fold, so selections agree engine-for-engine per criterion.
     """
+    crit = resolve_criterion(criterion)
     source = as_source(*source) if isinstance(source, tuple) else as_source(source)
     if not score.supports_streaming:
         raise ValueError(
@@ -124,8 +136,7 @@ def mrmr_streaming(
             "finalize). Materialise the data and use an in-memory engine."
         )
     n = source.num_features
-    if not 0 < num_select <= n:
-        raise ValueError(f"num_select={num_select} out of range for {n} features")
+    check_num_select(num_select, n)
     if prefetch < 0:
         raise ValueError(f"prefetch must be >= 0, got {prefetch}")
 
@@ -138,23 +149,32 @@ def mrmr_streaming(
     acc_fn = jax.jit(score.accumulate, out_shardings=shardings)
 
     rel = _score_pass(source, score, acc_fn, placer, None, prefetch)
+    rel_j = jnp.asarray(rel)
+    cstate = crit.init_state(n)
     mask = np.zeros((n,), bool)
-    red_sum = np.zeros((n,), np.float32)
     selected = np.full((num_select,), -1, np.int32)
     gains = np.zeros((num_select,), np.float32)
     for l in range(num_select):
-        # f32 host math mirrors the device drivers, so argmax ties resolve
-        # identically to the in-memory engines (toward the lowest id).
-        g = rel - red_sum / np.float32(max(l, 1))
+        # The criterion fold is the same pure-f32 jnp math the device
+        # drivers trace, so argmax ties resolve identically to the
+        # in-memory engines (toward the lowest id).
+        g = np.array(crit.objective(rel_j, cstate, l), np.float32)
         g[mask] = _NEG_INF
         k = int(np.argmax(g))
         selected[l], gains[l] = k, g[k]
         mask[k] = True
-        if l + 1 < num_select:
-            red_sum = red_sum + _score_pass(
-                source, score, acc_fn, placer, k, prefetch
-            )
-    return MRMRResult(selected=jnp.asarray(selected), gains=jnp.asarray(gains))
+        if l + 1 < num_select and crit.needs_redundancy:
+            # One redundancy pass of I/O vs the just-picked column; maxrel
+            # (needs_redundancy=False) never re-reads the source.
+            red = _score_pass(source, score, acc_fn, placer, k, prefetch)
+            cstate = crit.update(cstate, jnp.asarray(red), l)
+    return MRMRResult(
+        selected=jnp.asarray(selected),
+        gains=jnp.asarray(gains),
+        relevance=jnp.asarray(rel),
+        criterion=crit.name,
+        engine="streaming",
+    )
 
 
 @register_engine("streaming")
@@ -169,4 +189,5 @@ def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
         obs_axes=plan.obs_axes,
         feat_axes=plan.feat_axes,
         prefetch=plan.prefetch,
+        criterion=plan.criterion,
     )

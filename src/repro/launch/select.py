@@ -12,6 +12,10 @@
     PYTHONPATH=src python -m repro.launch.select \
         --input data.npy --target target.npy --block-obs 65536 --prefetch 2
 
+    # Quotient-form mRMR (MIQ) instead of the paper's difference form;
+    # any registered criterion runs on any engine, streamed or in-memory:
+    PYTHONPATH=src python -m repro.launch.select --criterion miq
+
     # Wide regime: stream with feature-sharded statistics over 2 devices
     # (the per-pair statistics state splits across the model axis):
     PYTHONPATH=src REPRO_DEVICES=2 python -m repro.launch.select \
@@ -51,8 +55,13 @@ import time
 import jax
 import numpy as np
 
+from repro.core.criteria import available_criteria
 from repro.core.scores import MIScore, PearsonMIScore
-from repro.core.selector import MRMRSelector, available_encodings
+from repro.core.selector import (
+    MRMRSelector,
+    available_encodings,
+    check_num_select,
+)
 from repro.data.sources import CSVSource, NpySource
 from repro.data.synthetic import corral_dataset_np
 from repro.dist.meshes import make_mesh
@@ -88,6 +97,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--select", type=int, default=10)
     ap.add_argument("--encoding", default="auto",
                     choices=("auto",) + available_encodings())
+    ap.add_argument("--criterion", default="mid",
+                    choices=available_criteria(),
+                    help="greedy objective: mid (paper's difference form), "
+                         "miq (quotient), maxrel (relevance only; streamed "
+                         "fits then need a single pass of I/O)")
     ap.add_argument("--mesh-obs", type=int, default=0,
                     help="observation-axis mesh extent (grid; 0 = auto)")
     ap.add_argument("--mesh-feat", type=int, default=0,
@@ -107,6 +121,15 @@ def main(argv=None) -> dict:
 
     X, y, source = _load_input(args)
 
+    # Fail the bounds check here, before any engine work: the selector
+    # raises the same ValueError, but a CLI user should see a one-line
+    # message, not a traceback out of fit().
+    n_features = source.num_features if source is not None else X.shape[1]
+    try:
+        check_num_select(args.select, n_features)
+    except ValueError as e:
+        raise SystemExit(f"--select invalid: {e}") from None
+
     if args.score == "mi":
         score = MIScore(num_values=args.num_values,
                         num_classes=args.num_classes)
@@ -124,14 +147,16 @@ def main(argv=None) -> dict:
 
     t0 = time.time()
     sel = MRMRSelector(
-        num_select=args.select, score=score, encoding=args.encoding,
-        mesh=mesh, incremental=bool(args.incremental), block=args.block,
+        num_select=args.select, score=score, criterion=args.criterion,
+        encoding=args.encoding, mesh=mesh,
+        incremental=bool(args.incremental), block=args.block,
         block_obs=args.block_obs, prefetch=args.prefetch,
     )
     sel = sel.fit(source) if source is not None else sel.fit(X, y)
     plan = sel.plan_
     out = {
         "encoding": plan.encoding,
+        "criterion": sel.result_.criterion,
         "mesh": dict(zip(plan.mesh_axes, plan.mesh_shape)),
         "devices": len(jax.devices()),
         "incremental": plan.incremental,

@@ -88,6 +88,21 @@ def main() -> None:
     np.testing.assert_allclose(grid.gains, ref.gains, rtol=1e-4, atol=1e-5)
     print("grid 4x2: OK")
 
+    # --- criterion layer on real meshes: miq agrees engine-for-engine ------
+    miq_ref = mrmr_reference(jnp.asarray(X.T), jnp.asarray(y), L, score,
+                             criterion="miq")
+    miq_conv = mrmr_conventional(jnp.asarray(X), jnp.asarray(y), L, score,
+                                 mesh=mesh8, criterion="miq")
+    miq_alt = mrmr_alternative(jnp.asarray(X.T), jnp.asarray(y), L, score,
+                               mesh=mesh_m, criterion="miq")
+    miq_grid = mrmr_grid(jnp.asarray(X), jnp.asarray(y), L, score,
+                         mesh=mesh_g, criterion="miq")
+    for got in (miq_conv, miq_alt, miq_grid):
+        np.testing.assert_array_equal(np.asarray(got.selected),
+                                      np.asarray(miq_ref.selected))
+    assert miq_conv.criterion == "miq" and miq_conv.engine == "conventional"
+    print("criterion miq (8-way conv/alt/grid): OK")
+
     # --- paper-faithful (non-incremental) distributed path -----------------
     conv_f = mrmr_conventional(
         jnp.asarray(X), jnp.asarray(y), L, score,

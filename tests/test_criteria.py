@@ -1,0 +1,342 @@
+"""Criterion layer: fold semantics, registry, engine x criterion
+equivalence (the api_redesign acceptance bar), and the selector read side.
+"""
+
+import dataclasses
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro import (
+    Criterion,
+    CustomScore,
+    MIDCriterion,
+    MIQCriterion,
+    MIScore,
+    MRMRSelector,
+    MaxRelCriterion,
+    available_criteria,
+    register_criterion,
+)
+from repro.core import mrmr_reference
+from repro.core.criteria import _CRITERIA, resolve_criterion
+from repro.core.mrmr import MRMRResult
+from repro.core.selector import check_num_select, register_engine
+from repro.data.synthetic import corral_dataset
+from repro.dist import make_mesh
+
+
+@pytest.fixture(scope="module")
+def corral():
+    X, y = corral_dataset(2000, 32, seed=1, flip_prob=0.02)
+    return np.asarray(X, np.int32), np.asarray(y)
+
+
+ALL_ENCODINGS = ["reference", "conventional", "alternative", "grid"]
+
+
+def fit(X, y, encoding, L=5, **kw):
+    mesh = make_mesh((1, 1), ("data", "model")) if encoding == "grid" else None
+    return MRMRSelector(num_select=L, encoding=encoding, mesh=mesh, **kw).fit(X, y)
+
+
+class TestFoldSemantics:
+    """The built-in folds compute exactly their documented formulas."""
+
+    def test_mid_is_difference(self):
+        crit = MIDCriterion()
+        rel = jnp.asarray([1.0, 2.0, 3.0])
+        st = crit.init_state(3)
+        st = crit.update(st, jnp.asarray([0.5, 1.0, 0.0]), 0)
+        st = crit.update(st, jnp.asarray([0.5, 1.0, 0.0]), 1)
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [0.5, 1.0, 3.0]
+        )
+        # l=0: empty state, denominator clamps to 1 -> pure relevance
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, crit.init_state(3), 0)),
+            np.asarray(rel),
+        )
+
+    def test_miq_is_quotient(self):
+        crit = MIQCriterion()
+        rel = jnp.asarray([1.0, 2.0])
+        st = crit.update(crit.init_state(2), jnp.asarray([0.5, 4.0]), 0)
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 1)), [2.0, 0.5]
+        )
+
+    def test_miq_first_pick_is_relevance_argmax(self, corral):
+        X, y = corral
+        miq = fit(X, y, "reference", criterion="miq")
+        assert miq.selected_[0] == int(np.argmax(miq.scores_))
+
+    def test_maxrel_needs_no_redundancy(self):
+        crit = MaxRelCriterion()
+        assert not crit.needs_redundancy
+        rel = jnp.asarray([3.0, 1.0])
+        st = crit.update(crit.init_state(2), jnp.asarray([9.0, 9.0]), 0)
+        np.testing.assert_allclose(np.asarray(crit.objective(rel, st, 1)), rel)
+
+    def test_maxrel_selects_top_relevance(self, corral):
+        X, y = corral
+        sel = fit(X, y, "reference", L=6, criterion="maxrel")
+        # iterated masked argmax == stable descending relevance order
+        want = np.argsort(-sel.scores_, kind="stable")[:6]
+        np.testing.assert_array_equal(sel.selected_, want)
+
+
+class TestRegistry:
+    def test_builtins_registered(self):
+        assert {"mid", "miq", "maxrel"} <= set(available_criteria())
+
+    def test_resolve(self):
+        assert resolve_criterion("mid").name == "mid"
+        inst = MIQCriterion()
+        assert resolve_criterion(inst) is inst
+        assert resolve_criterion(None).name == "mid"
+        with pytest.raises(ValueError, match="unknown criterion"):
+            resolve_criterion("nope")
+
+    def test_unnamed_criterion_rejected(self):
+        with pytest.raises(ValueError, match="no name"):
+            register_criterion(Criterion())
+
+    def test_name_alias_syncs_instance_name(self):
+        # Registering under name= must keep provenance (.name) in sync
+        # with the registry key, or result_.criterion could not be
+        # round-tripped through resolve_criterion.
+        try:
+            register_criterion(MIQCriterion(), name="_test_alias")
+            crit = resolve_criterion("_test_alias")
+            assert crit.name == "_test_alias"
+        finally:
+            _CRITERIA.pop("_test_alias", None)
+
+    def test_register_round_trip(self, corral):
+        # The user-extensibility bar: a registered criterion is resolvable
+        # by name and runs end-to-end through the front door.
+        X, y = corral
+
+        @register_criterion
+        @dataclasses.dataclass(frozen=True)
+        class DoublePenalty(MIDCriterion):
+            name = "_test_mid2x"
+
+            def objective(self, rel, state, l):
+                denom = jnp.maximum(l, 1).astype(jnp.float32)
+                return rel - 2.0 * state["red_sum"] / denom
+
+        try:
+            assert "_test_mid2x" in available_criteria()
+            sel = MRMRSelector(num_select=4, criterion="_test_mid2x").fit(X, y)
+            assert sel.result_.criterion == "_test_mid2x"
+            assert len(set(sel.selected_.tolist())) == 4
+            # doubling the penalty is not a no-op on this dataset's gains
+            mid = MRMRSelector(num_select=4, criterion="mid").fit(X, y)
+            assert not np.allclose(sel.gains_[1:], mid.gains_[1:])
+        finally:
+            _CRITERIA.pop("_test_mid2x", None)
+
+
+class TestMidReproducesLegacy:
+    """`mid` through the Criterion layer == the pre-criterion fold.
+
+    The default path IS the criterion path now, so the strongest pin is
+    (a) default == explicit mid == fresh MIDCriterion instance, bitwise,
+    and (b) the objective trajectory equals an independently computed
+    rel - red_sum/l fold from the raw score primitives.
+    """
+
+    @pytest.mark.parametrize("encoding", ALL_ENCODINGS)
+    def test_default_is_mid_bitwise(self, corral, encoding):
+        X, y = corral
+        a = fit(X, y, encoding)
+        b = fit(X, y, encoding, criterion="mid")
+        c = fit(X, y, encoding, criterion=MIDCriterion())
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        np.testing.assert_array_equal(a.selected_, c.selected_)
+        np.testing.assert_array_equal(a.gains_, b.gains_)   # bitwise
+        np.testing.assert_array_equal(a.gains_, c.gains_)   # bitwise
+
+    def test_trajectory_matches_manual_fold(self, corral):
+        X, y = corral
+        L = 5
+        score = MIScore(2, 2)
+        sel = fit(X, y, "reference", L=L)
+        # independent numpy fold over the same score primitives
+        Xr = jnp.asarray(X.T)
+        rel = np.asarray(score.relevance(Xr, jnp.asarray(y)), np.float32)
+        red_sum = np.zeros_like(rel)
+        mask = np.zeros(rel.shape, bool)
+        for l in range(L):
+            g = rel - red_sum / np.float32(max(l, 1))
+            g[mask] = -np.inf
+            k = int(np.argmax(g))
+            assert sel.selected_[l] == k
+            # in-loop vs out-of-loop XLA fusion wiggles the last ulp or two
+            np.testing.assert_allclose(sel.gains_[l], g[k], rtol=1e-5,
+                                       atol=1e-6)
+            mask[k] = True
+            red_sum = red_sum + np.asarray(
+                score.redundancy(Xr, Xr[k]), np.float32
+            )
+
+    @pytest.mark.parametrize("encoding", ["reference", "conventional"])
+    def test_recompute_path_mid(self, corral, encoding):
+        X, y = corral
+        a = fit(X, y, encoding, L=6, incremental=True)
+        b = fit(X, y, encoding, L=6, incremental=False)
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        np.testing.assert_allclose(a.gains_, b.gains_, rtol=1e-5, atol=1e-6)
+
+
+class TestCriterionEngineAgreement:
+    """Every criterion selects identically on every engine."""
+
+    @pytest.mark.parametrize("criterion", ["miq", "maxrel"])
+    def test_engines_agree(self, corral, criterion):
+        X, y = corral
+        ref = fit(X, y, "reference", criterion=criterion)
+        for encoding in ALL_ENCODINGS[1:]:
+            got = fit(X, y, encoding, criterion=criterion)
+            np.testing.assert_array_equal(got.selected_, ref.selected_)
+            # the quotient amplifies cross-engine MI ulp differences when
+            # mean redundancy is tiny; selections are the acceptance bar
+            np.testing.assert_allclose(got.gains_, ref.gains_,
+                                       rtol=5e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("encoding", ["reference", "conventional",
+                                          "alternative"])
+    def test_miq_incremental_equals_recompute(self, corral, encoding):
+        X, y = corral
+        a = fit(X, y, encoding, L=6, criterion="miq", incremental=True)
+        b = fit(X, y, encoding, L=6, criterion="miq", incremental=False)
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+
+    def test_miq_differs_from_mid_somewhere(self, corral):
+        # The knob must actually steer: on this seed dataset the quotient
+        # form picks a different set than the difference form.
+        X, y = corral
+        mid = fit(X, y, "reference", criterion="mid")
+        miq = fit(X, y, "reference", criterion="miq")
+        assert mid.selected_.tolist() != miq.selected_.tolist()
+
+
+class TestGuards:
+    def test_custom_score_rejects_non_mid(self, corral):
+        X, y = corral
+        score = CustomScore(get_result=lambda v, c, s, n: jnp.float32(0))
+        with pytest.raises(ValueError, match="CustomScore"):
+            MRMRSelector(num_select=2, score=score, criterion="miq").fit(X, y)
+
+    def test_unknown_criterion_fails_at_fit(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="unknown criterion"):
+            MRMRSelector(num_select=2, criterion="typo").fit(X, y)
+
+    def test_check_num_select(self):
+        check_num_select(1, 1)
+        for bad in (0, -3, 5):
+            with pytest.raises(ValueError, match="out of range"):
+                check_num_select(bad, 4)
+
+
+class TestResultReport:
+    def test_rich_result_fields(self, corral):
+        X, y = corral
+        score = MIScore(2, 2)
+        res = mrmr_reference(jnp.asarray(X.T), jnp.asarray(y), 4, score,
+                             criterion="miq")
+        assert res.criterion == "miq" and res.engine == "reference"
+        assert res.relevance.shape == (X.shape[1],)
+        np.testing.assert_allclose(
+            np.asarray(res.relevance),
+            np.asarray(score.relevance(jnp.asarray(X.T), jnp.asarray(y))),
+            rtol=1e-6,
+        )
+        np.testing.assert_array_equal(
+            np.asarray(res.objective_trajectory), np.asarray(res.gains)
+        )
+
+    def test_custom_score_nan_relevance(self, corral):
+        from repro.core import mrmr_custom_score
+
+        X, y = corral
+        custom = mrmr_custom_score(MIScore(2, 2))
+        sel = MRMRSelector(num_select=3, score=custom).fit(X, y)
+        assert np.isnan(sel.scores_).all()
+        assert sel.result_.engine == "alternative"  # custom -> alternative
+
+
+class TestSelectorReadSide:
+    @pytest.mark.parametrize("encoding", ALL_ENCODINGS)
+    def test_in_memory_read_side(self, corral, encoding):
+        X, y = corral
+        L = 5
+        sel = fit(X, y, encoding, L=L)
+        n = X.shape[1]
+        assert sel.n_features_in_ == n
+        assert sel.scores_.shape == (n,) and sel.scores_.dtype == np.float32
+        # relevance VALUES must survive sharded assembly (out_specs concat
+        # order on feature-sharded engines under forced multi-device runs)
+        want = np.asarray(
+            MIScore(2, 2).relevance(jnp.asarray(X.T), jnp.asarray(y))
+        )
+        np.testing.assert_allclose(sel.scores_, want, rtol=1e-4, atol=1e-6)
+        # ranking: selected get 1..L in pick order, the rest share L+1
+        assert sel.ranking_.shape == (n,)
+        for rank, feat in enumerate(sel.selected_, start=1):
+            assert sel.ranking_[feat] == rank
+        assert (sel.ranking_[sel.get_support() == False] == L + 1).all()  # noqa: E712
+        # support: boolean mask <-> ascending indices
+        mask = sel.get_support()
+        assert mask.dtype == bool and mask.sum() == L
+        np.testing.assert_array_equal(
+            sel.get_support(indices=True), np.sort(sel.selected_)
+        )
+
+    def test_streaming_read_side(self, corral):
+        from repro.data.sources import ArraySource
+
+        X, y = corral
+        sel = MRMRSelector(num_select=4, block_obs=300).fit(ArraySource(X, y))
+        assert sel.plan_.encoding == "streaming"
+        assert sel.scores_.shape == (X.shape[1],)
+        assert sel.result_.engine == "streaming"
+        assert sel.get_support().sum() == 4
+        in_mem = MRMRSelector(num_select=4).fit(X, y)
+        np.testing.assert_allclose(sel.scores_, in_mem.scores_,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_get_support_before_fit_raises(self):
+        with pytest.raises(RuntimeError, match="fit"):
+            MRMRSelector(num_select=2).get_support()
+
+    def test_stub_engine_without_relevance(self, corral):
+        # Engines predating the rich report return MRMRResult(sel, gains);
+        # the selector must still populate ranking_/support and leave
+        # scores_ None rather than crash.
+        X, y = corral
+
+        @register_engine("_test_stub_crit")
+        def stub(X, y, *, num_select, plan, mesh):
+            return MRMRResult(
+                selected=jnp.arange(num_select, dtype=jnp.int32),
+                gains=jnp.zeros((num_select,), jnp.float32),
+            )
+
+        try:
+            sel = MRMRSelector(num_select=3, encoding="_test_stub_crit",
+                               criterion="miq").fit(X, y)
+            assert sel.scores_ is None
+            assert sel.result_.engine == "_test_stub_crit"
+            # criterion provenance backfills from the plan, not "mid"
+            assert sel.result_.criterion == "miq"
+            np.testing.assert_array_equal(sel.get_support(indices=True),
+                                          [0, 1, 2])
+        finally:
+            from repro.core import selector as selector_mod
+
+            selector_mod._ENGINES.pop("_test_stub_crit", None)

@@ -218,6 +218,90 @@ class TestStreamingEquivalence:
                                       corral_selected[0])
 
 
+class TestCriterionStreaming:
+    """Criterion x streaming acceptance: every criterion's streamed
+    selections match the same criterion's in-memory selections at every
+    tested block size and mesh."""
+
+    # 999 does not divide 1500; 4096 exceeds it — both must still match.
+    @pytest.mark.parametrize("block_obs", [128, 999, 4096])
+    def test_miq_matches_in_memory(self, corral, block_obs):
+        X, y = corral
+        want = MRMRSelector(num_select=5, score=MIScore(2, 2),
+                            criterion="miq").fit(X, y)
+        got = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), criterion="miq",
+            block_obs=block_obs,
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        # gains: the quotient amplifies the tiny bf16-onehot-vs-int32-counts
+        # MI differences when mean redundancy is near zero; selection
+        # identity is the acceptance bar
+        np.testing.assert_allclose(got.gains_, want.gains_,
+                                   rtol=5e-2, atol=1e-5)
+        assert got.plan_.encoding == "streaming"
+        assert got.result_.criterion == "miq"
+
+    def test_miq_on_obs_mesh(self, corral):
+        X, y = corral
+        n_dev = len(jax.devices())
+        mesh = make_mesh((n_dev,), ("data",))
+        want = MRMRSelector(num_select=5, score=MIScore(2, 2),
+                            criterion="miq").fit(X, y)
+        got = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), criterion="miq", mesh=mesh,
+            block_obs=200,
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+
+    def test_miq_feature_sharded_wide(self):
+        # wide regime: statistics state sharded over features, miq fold on
+        # the host — must match the in-memory alternative engine.
+        X, y = CorralSource(256, 1024, seed=5).materialize()
+        want = MRMRSelector(num_select=5, score=MIScore(2, 2),
+                            criterion="miq", encoding="alternative").fit(X, y)
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        got = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), criterion="miq", mesh=mesh,
+            block_obs=100,
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+
+    def test_maxrel_single_pass_io(self, corral):
+        # needs_redundancy=False must collapse streaming I/O to ONE pass
+        # over the source (plus nothing else: score given explicitly, so
+        # no stats() scan either).
+        X, y = corral
+        passes = []
+
+        class Counting(ArraySource):
+            def iter_blocks(self, block_obs):
+                passes.append(block_obs)
+                return super().iter_blocks(block_obs)
+
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), criterion="maxrel",
+            block_obs=300,
+        ).fit(Counting(X, y))
+        assert len(passes) == 1
+        want = MRMRSelector(num_select=5, score=MIScore(2, 2),
+                            criterion="maxrel").fit(X, y)
+        np.testing.assert_array_equal(sel.selected_, want.selected_)
+
+    def test_mid_trajectory_identical_to_in_memory(self, corral,
+                                                   corral_selected):
+        # mid through the criterion layer keeps the pre-criterion
+        # streaming contract: selections equal the in-memory engines.
+        X, y = corral
+        sel = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), criterion="mid",
+            block_obs=300,
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(sel.selected_, corral_selected[0])
+        np.testing.assert_allclose(sel.gains_, corral_selected[1],
+                                   rtol=1e-4, atol=1e-5)
+
+
 class TestStreamingPrimitives:
     def test_mi_accumulate_equals_batch(self, corral):
         import jax.numpy as jnp
