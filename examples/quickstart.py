@@ -58,3 +58,20 @@ print(f"{'streaming':>12s}: encoding={plan.encoding!r} "
       f"obs_axes={plan.obs_axes} feat_axes={plan.feat_axes} "
       f"block_obs={plan.block_obs} prefetch={plan.prefetch}")
 print(f"{'':>12s}  selected {list(fs.selected_)}")
+
+# Selection-as-a-service: fits run as managed jobs behind a bounded work
+# queue, with a content-addressed result cache (source fingerprint x
+# score x criterion x num_select) and idempotency-key coalescing — the
+# identical resubmission below is a cache hit with zero engine or I/O
+# passes, and a stampede of identical concurrent submits runs once.
+# (CLI: python -m repro.launch.serve_select --repeat 2 --distinct-select 3)
+from repro.serve import SelectionService
+
+with SelectionService(workers=2) as svc:
+    job = svc.submit(CorralSource(20_000, 64, seed=0), num_select=10)
+    result = svc.result(job)  # blocks until DONE; raises on FAILED
+    again = svc.submit(CorralSource(20_000, 64, seed=0), num_select=10)
+    info = svc.poll(again)
+    print(f"{'service':>12s}: selected {[int(v) for v in result.selected]}")
+    print(f"{'':>12s}  resubmission cache_hit={info.cache_hit} "
+          f"cache={svc.stats()['cache']}")

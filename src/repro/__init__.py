@@ -87,6 +87,37 @@ own fold with :func:`~repro.core.criteria.register_criterion`::
         name = "mid2x"     # then: MRMRSelector(10, criterion="mid2x")
         ...                # init_state / update / objective (pure jnp)
 
+Service
+-------
+
+Selection-as-a-service: :class:`~repro.serve.selection.SelectionService`
+runs fits as managed jobs behind a bounded work queue, a worker pool, a
+content-addressed result cache and idempotency-key request coalescing.
+Identical requests (same source *content*, score, criterion and
+``num_select`` — execution geometry like ``block_obs`` deliberately
+excluded) share one cache line; a stampede of identical in-flight
+submissions runs the engine exactly once; a full queue rejects with
+``Backpressure(retry_after_s=...)`` instead of blocking::
+
+    from repro.serve import SelectionService
+
+    with SelectionService(workers=2, cache_dir="/tmp/selcache") as svc:
+        job = svc.submit("X.npy::y.npy", num_select=10)
+        result = svc.result(job)     # blocks; MRMRResult
+        again = svc.submit("X.npy::y.npy", num_select=10)
+        svc.poll(again).cache_hit    # True — zero engine or I/O passes
+        svc.stats()                  # queue / coalescing / cache counters
+
+The cache is backed by every ``DataSource``'s ``fingerprint()`` (content
+hash for in-memory arrays, ``(path, size, mtime)`` for file-backed
+sources, generator params for synthetics) — the same fingerprint that
+memoises repeated ``stats()`` scans.  ``MRMRResult.to_json()`` /
+``from_json()`` round-trip results for the persistent cache and the
+``--output`` flag of ``python -m repro.launch.select``; transient worker
+failures retry with exponential backoff
+(:func:`~repro.runtime.resilience.retry_with_backoff`).  (CLI demo:
+``python -m repro.launch.serve_select --repeat 2 --distinct-select 3``.)
+
 Layers
 ------
 
@@ -101,8 +132,11 @@ Layers
 * ``repro.kernels`` — Pallas TPU kernels for the scoring hot spots.
 * ``repro.models``  — architecture zoo (dense / MoE / SSM / hybrid /
   enc-dec / VLM backbones) used as workloads for the substrate.
+* ``repro.serve``   — selection-as-a-service: job manager, coalescing
+  work queue, content-addressed result cache (plus the LM serving demo).
 * ``repro.launch``  — production mesh, multi-pod dry-run, CLIs
-  (``python -m repro.launch.select`` runs selection end-to-end).
+  (``python -m repro.launch.select`` runs selection end-to-end,
+  ``python -m repro.launch.serve_select`` drives the service).
 """
 
 from repro.core import (  # noqa: F401
@@ -126,7 +160,7 @@ from repro.core import (  # noqa: F401
     register_engine,
 )
 
-__version__ = "1.2.0"
+__version__ = "1.3.0"
 
 __all__ = [
     "Criterion",

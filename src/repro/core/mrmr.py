@@ -34,10 +34,15 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import json
+import math
+import threading
+from collections import OrderedDict
 from typing import Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
@@ -81,6 +86,120 @@ class MRMRResult:
     def objective_trajectory(self) -> Array:
         """Alias of ``gains`` — the objective value of each pick."""
         return self.gains
+
+    # -- serialization ---------------------------------------------------
+    # The result cache persists entries as JSON and launch/select.py can
+    # write one to --output; non-finite floats (CustomScore relevance is
+    # NaN-filled) are encoded as the strings "nan"/"inf"/"-inf" so the
+    # payload stays strict JSON.
+
+    def to_json(self) -> str:
+        """Serialise to a strict-JSON string (``from_json`` round-trips)."""
+
+        def enc(a):
+            if a is None:
+                return None
+            x = np.asarray(a)
+            if np.issubdtype(x.dtype, np.floating):
+                return [
+                    float(v) if math.isfinite(v) else repr(float(v))
+                    for v in x.tolist()
+                ]
+            return x.tolist()
+
+        return json.dumps(
+            dict(
+                version=1,
+                selected=enc(self.selected),
+                gains=enc(self.gains),
+                relevance=enc(self.relevance),
+                criterion=self.criterion,
+                engine=self.engine,
+            )
+        )
+
+    @classmethod
+    def from_json(cls, payload: str) -> "MRMRResult":
+        """Rebuild a result serialised by :meth:`to_json`."""
+        d = json.loads(payload)
+
+        def dec(vals, dtype):
+            if vals is None:
+                return None
+            return jnp.asarray(
+                [float(v) if isinstance(v, str) else v for v in vals], dtype
+            )
+
+        return cls(
+            selected=dec(d["selected"], jnp.int32),
+            gains=dec(d["gains"], jnp.float32),
+            relevance=dec(d.get("relevance"), jnp.float32),
+            criterion=d.get("criterion", ""),
+            engine=d.get("engine", ""),
+        )
+
+
+# ---------------------------------------------------------------------------
+# warm jit cache
+# ---------------------------------------------------------------------------
+
+class WarmJitCache:
+    """Bounded LRU of built (jit-wrapped) callables, keyed by hashables.
+
+    ``jax.jit`` memoises traces/executables *per wrapper object*: a fresh
+    ``jax.jit(fn)`` on every fit recompiles even when the job is identical.
+    Keeping the wrapper alive across fits keyed by what actually shapes the
+    computation (engine × criterion × score × block shape × mesh) means
+    repeat traffic — the selection service's whole diet — never pays
+    trace or compile again.  Unhashable keys (e.g. a custom criterion
+    holding a list) bypass the cache rather than erroring.
+    """
+
+    def __init__(self, capacity: int = 32):
+        if capacity < 1:
+            raise ValueError(f"capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self._entries: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.uncacheable = 0
+
+    def get_or_build(self, key, build):
+        try:
+            hash(key)
+        except TypeError:
+            with self._lock:
+                self.uncacheable += 1
+            return build()
+        with self._lock:
+            if key in self._entries:
+                self._entries.move_to_end(key)
+                self.hits += 1
+                return self._entries[key]
+        fn = build()
+        with self._lock:
+            self.misses += 1
+            self._entries[key] = fn
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.evictions += 1
+        return fn
+
+    def stats(self) -> dict:
+        with self._lock:
+            return dict(
+                size=len(self._entries), capacity=self.capacity,
+                hits=self.hits, misses=self.misses,
+                evictions=self.evictions, uncacheable=self.uncacheable,
+            )
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.hits = self.misses = self.evictions = self.uncacheable = 0
 
 
 # ---------------------------------------------------------------------------

@@ -37,7 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import mrmr as mrmr_mod
 from repro.core.criteria import Criterion, resolve_criterion
-from repro.core.mrmr import MRMRResult
+from repro.core.mrmr import MRMRResult, WarmJitCache
 from repro.core.scores import MIScore, PearsonMIScore, ScoreFn, _OOR
 from repro.data.sources import ArraySource, DataSource
 from repro.dist.meshes import factor_mesh, make_mesh
@@ -324,6 +324,47 @@ def build_engine_fn(
     raise ValueError(f"unknown encoding {enc!r}")
 
 
+# Warm engine-fn cache: the built (jit-wrapped) engine callables, keyed by
+# everything that shapes the computation.  jax memoises executables per
+# wrapper object, so reusing the wrapper across fits makes a repeat fit
+# (same engine × criterion × score × geometry — the selection service's
+# steady state) skip trace AND compile entirely.
+_ENGINE_FN_CACHE = WarmJitCache(capacity=32)
+
+
+def _engine_fn_key(plan: SelectionPlan, mesh, num_select: int, n_features: int):
+    return (
+        "engine_fn", plan.encoding, plan.score,
+        resolve_criterion(plan.criterion), num_select, n_features, mesh,
+        plan.block, plan.incremental, plan.obs_axes, plan.feat_axes,
+        plan.onehot_dtype, plan.static_inner,
+    )
+
+
+def cached_engine_fn(
+    plan: SelectionPlan, mesh: Mesh | None, num_select: int, n_features: int
+):
+    """:func:`build_engine_fn` through the warm jit cache.
+
+    Unhashable plan ingredients (a custom criterion or score holding
+    mutable state) fall back to an uncached build.
+    """
+    return _ENGINE_FN_CACHE.get_or_build(
+        _engine_fn_key(plan, mesh, num_select, n_features),
+        lambda: build_engine_fn(plan, mesh, num_select, n_features),
+    )
+
+
+def engine_fn_cache_stats() -> dict:
+    """Hit/miss/eviction counters of the warm engine-fn cache."""
+    return _ENGINE_FN_CACHE.stats()
+
+
+def clear_engine_fn_cache() -> None:
+    """Drop every warmed engine fn (tests; frees compiled executables)."""
+    _ENGINE_FN_CACHE.clear()
+
+
 def _pad_axis(x: Array, axis: int, multiple: int, fill) -> Array:
     pad = (-x.shape[axis]) % multiple
     if pad == 0:
@@ -354,11 +395,9 @@ def _result(plan: SelectionPlan, engine: str, sel, gains, rel, n: int):
 @register_engine("reference")
 def _fit_reference(X, y, *, num_select, plan, mesh) -> MRMRResult:
     del mesh
-    res = mrmr_mod.mrmr_reference(
-        jnp.asarray(X).T, y, num_select, plan.score,
-        incremental=plan.incremental, criterion=plan.criterion,
-    )
-    return res
+    fn = cached_engine_fn(plan, None, num_select, X.shape[1])
+    sel, gains, rel = fn(jnp.asarray(X).T, y)
+    return _result(plan, "reference", sel, gains, rel, X.shape[1])
 
 
 @register_engine("conventional")
@@ -370,7 +409,7 @@ def _fit_conventional(X, y, *, num_select, plan, mesh) -> MRMRResult:
     yp = _pad_axis(y, 0, ext, fill=_OOR)
     Xp = _place(Xp, mesh, P(plan.obs_axes, None))
     yp = _place(yp, mesh, P(plan.obs_axes))
-    fn = build_engine_fn(plan, mesh, num_select, X.shape[1])
+    fn = cached_engine_fn(plan, mesh, num_select, X.shape[1])
     sel, gains, rel = fn(Xp, yp)
     return _result(plan, "conventional", sel, gains, rel, X.shape[1])
 
@@ -384,7 +423,7 @@ def _fit_alternative(X, y, *, num_select, plan, mesh) -> MRMRResult:
     Xr = _pad_axis(jnp.asarray(X).T, 0, ext, fill=0)
     Xr = _place(Xr, mesh, P(plan.feat_axes, None))
     yb = _place(y, mesh, P())
-    fn = build_engine_fn(plan, mesh, num_select, n)
+    fn = cached_engine_fn(plan, mesh, num_select, n)
     sel, gains, rel = fn(Xr, yb)
     return _result(plan, "alternative", sel, gains, rel, n)
 
@@ -401,7 +440,7 @@ def _fit_grid(X, y, *, num_select, plan, mesh) -> MRMRResult:
     yp = _pad_axis(y, 0, oext, fill=_OOR)
     Xp = _place(Xp, mesh, P(plan.obs_axes, plan.feat_axes))
     yp = _place(yp, mesh, P(plan.obs_axes))
-    fn = build_engine_fn(plan, mesh, num_select, n)
+    fn = cached_engine_fn(plan, mesh, num_select, n)
     sel, gains, rel = fn(Xp, yp)
     return _result(plan, "grid", sel, gains, rel, n)
 

@@ -48,13 +48,48 @@ import numpy as np
 from jax.sharding import Mesh
 
 from repro.core.criteria import Criterion, resolve_criterion
-from repro.core.mrmr import MRMRResult
+from repro.core.mrmr import MRMRResult, WarmJitCache
 from repro.core.scores import ScoreFn
 from repro.core.selector import check_num_select, register_engine
 from repro.data.sources import DataSource, as_source
 from repro.dist.streaming import BlockPlacer, PrefetchPlacer
 
 _NEG_INF = float("-inf")
+
+# Warm accumulate cache: one jitted accumulate per (score × mesh layout ×
+# block shape).  A fresh ``jax.jit(score.accumulate)`` every fit would
+# recompile the whole per-block step each time; keeping the wrapper keyed
+# by the placed geometry means repeat streamed fits (the selection
+# service's steady state) pay zero compile after the first.
+_ACC_FN_CACHE = WarmJitCache(capacity=32)
+
+
+def _cached_acc_fn(score: ScoreFn, placer: BlockPlacer, mesh: Mesh | None):
+    key = (
+        "acc_fn", score, mesh, placer.block_obs, placer.padded_features,
+        placer.obs_axes, placer.feat_axes,
+    )
+
+    def build():
+        # Pin the state layout (feature-sharded in the wide regime) through
+        # the compiled accumulate, so XLA never gathers the per-pair
+        # statistics.
+        shardings = placer.state_shardings(
+            score.init_state(placer.padded_features, "class")
+        )
+        return jax.jit(score.accumulate, out_shardings=shardings)
+
+    return _ACC_FN_CACHE.get_or_build(key, build)
+
+
+def acc_fn_cache_stats() -> dict:
+    """Hit/miss/eviction counters of the warm accumulate cache."""
+    return _ACC_FN_CACHE.stats()
+
+
+def clear_acc_fn_cache() -> None:
+    """Drop every warmed accumulate fn (tests; frees executables)."""
+    _ACC_FN_CACHE.clear()
 
 
 def _placed_blocks(
@@ -141,12 +176,7 @@ def mrmr_streaming(
         raise ValueError(f"prefetch must be >= 0, got {prefetch}")
 
     placer = BlockPlacer(block_obs, mesh, obs_axes, feat_axes, num_features=n)
-    # Pin the state layout (feature-sharded in the wide regime) through the
-    # compiled accumulate, so XLA never gathers the per-pair statistics.
-    shardings = placer.state_shardings(
-        score.init_state(placer.padded_features, "class")
-    )
-    acc_fn = jax.jit(score.accumulate, out_shardings=shardings)
+    acc_fn = _cached_acc_fn(score, placer, mesh)
 
     rel = _score_pass(source, score, acc_fn, placer, None, prefetch)
     rel_j = jnp.asarray(rel)

@@ -30,7 +30,11 @@ faces of one host-blocks protocol.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import io
+import os
+import threading
+from collections import OrderedDict
 from typing import Iterator, Tuple
 
 import numpy as np
@@ -40,6 +44,20 @@ Block = Tuple[np.ndarray, np.ndarray]
 # Internal generation granularity of synthetic sources: fixed, so the
 # emitted dataset is identical for every requested block_obs.
 _GEN_CHUNK = 8192
+
+# Cross-instance stats memo, keyed by source fingerprint: repeated fits on
+# the same file (the selection service constructs a fresh source per
+# request) used to rescan ``stats()`` — one full pass of I/O — every time.
+# Bounded LRU; :func:`clear_stats_memo` resets it (tests).
+_STATS_MEMO: OrderedDict = OrderedDict()
+_STATS_MEMO_CAP = 256
+_STATS_LOCK = threading.Lock()
+
+
+def clear_stats_memo() -> None:
+    """Drop every memoised ``stats()`` scan (tests / changed files)."""
+    with _STATS_LOCK:
+        _STATS_MEMO.clear()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -91,14 +109,61 @@ class DataSource:
         concatenating to the full dataset in a block-size-independent order."""
         raise NotImplementedError
 
+    # -- identity --------------------------------------------------------
+
+    def fingerprint(self) -> str:
+        """Content address of this source (hex sha256, memoised).
+
+        Two sources with the same fingerprint yield the same dataset; the
+        selection service keys its result cache and stats memo on it.
+        File-backed sources hash ``(path, size, mtime_ns)`` — the build-
+        system convention: cheap, and any rewrite changes it.  Synthetic
+        sources hash their generating parameters.  The base implementation
+        content-hashes the block stream (one pass; in-memory sources only).
+        """
+        cached = getattr(self, "_fingerprint", None)
+        if cached is not None:
+            return cached
+        h = hashlib.sha256()
+        h.update(
+            f"{type(self).__name__}:{self.num_obs}x{self.num_features}:".encode()
+        )
+        self._fingerprint_update(h)
+        fp = h.hexdigest()
+        object.__setattr__(self, "_fingerprint", fp)  # frozen-dataclass safe
+        return fp
+
+    def _fingerprint_update(self, h) -> None:
+        """Subclass hook: feed identity into the hash.  Default: full
+        content (dtypes + bytes of every block)."""
+        for X, y in self.iter_blocks(65536):
+            h.update(str(X.dtype).encode())
+            h.update(np.ascontiguousarray(X).tobytes())
+            h.update(str(y.dtype).encode())
+            h.update(np.ascontiguousarray(y).tobytes())
+
     # -- derived conveniences -------------------------------------------
 
     def stats(self, block_obs: int = 65536) -> SourceStats:
         """One streaming pass of metadata (cached): dtype regime + the
-        paper's ``d_v`` / ``d_c`` category counts."""
+        paper's ``d_v`` / ``d_c`` category counts.
+
+        Memoised twice over: per instance, and across instances by
+        :meth:`fingerprint` — a fresh source on the same file (how the
+        selection service builds them) reuses the scan instead of paying
+        a full pass of I/O per fit.
+        """
         cached = getattr(self, "_stats", None)
         if cached is not None:
             return cached
+        fp = self.fingerprint()
+        with _STATS_LOCK:
+            memo = _STATS_MEMO.get(fp)
+            if memo is not None:
+                _STATS_MEMO.move_to_end(fp)
+        if memo is not None:
+            object.__setattr__(self, "_stats", memo)
+            return memo
         x_max = y_max = 0
         x_min = y_min = 0
         discrete = True
@@ -128,6 +193,11 @@ class DataSource:
             num_classes=y_max + 1 if discrete else 0,
         )
         object.__setattr__(self, "_stats", st)  # works on frozen dataclasses
+        with _STATS_LOCK:
+            _STATS_MEMO[fp] = st
+            _STATS_MEMO.move_to_end(fp)
+            while len(_STATS_MEMO) > _STATS_MEMO_CAP:
+                _STATS_MEMO.popitem(last=False)
         return st
 
     def materialize(self, block_obs: int = 65536) -> Block:
@@ -228,6 +298,12 @@ class NpySource(ArraySource):
         )
         self.x_path, self.y_path = x_path, y_path
 
+    def _fingerprint_update(self, h) -> None:
+        # (path, size, mtime_ns) instead of content: fingerprinting must
+        # not cost a full pass over a file that exists precisely because
+        # it does not fit in memory.
+        _stat_fingerprint(h, self.x_path, self.y_path)
+
 
 class CSVSource(DataSource):
     """Streaming CSV reader: parses ``block_obs`` lines at a time.
@@ -288,6 +364,17 @@ class CSVSource(DataSource):
             self.target_dtype
         )
 
+    def _fingerprint_update(self, h) -> None:
+        # Parse knobs are part of the identity: the same file read with a
+        # different target column or dtype is a different dataset.
+        _stat_fingerprint(h, self.path)
+        h.update(
+            repr(
+                (self.target_col, str(self.dtype), str(self.target_dtype),
+                 self.delimiter)
+            ).encode()
+        )
+
     def iter_blocks(self, block_obs: int) -> Iterator[Block]:
         with open(self.path) as f:
             if self._has_header:
@@ -312,6 +399,15 @@ def _all_numeric(fields) -> bool:
         return True
     except ValueError:
         return False
+
+
+def _stat_fingerprint(h, *paths: str) -> None:
+    """Feed ``(abspath, size, mtime_ns)`` of each file into the hash."""
+    for p in paths:
+        st = os.stat(p)
+        h.update(
+            f"{os.path.abspath(p)}:{st.st_size}:{st.st_mtime_ns};".encode()
+        )
 
 
 @dataclasses.dataclass(frozen=True)
@@ -343,6 +439,14 @@ class CorralSource(DataSource):
     @property
     def num_features(self) -> int:
         return self.num_cols
+
+    def _fingerprint_update(self, h) -> None:
+        # The dataset is a pure function of these parameters — no I/O.
+        h.update(
+            repr(
+                (self.num_rows, self.num_cols, self.seed, self.flip_prob)
+            ).encode()
+        )
 
     def _chunk(self, ci: int) -> Block:
         rows = min(_GEN_CHUNK, self.num_rows - ci * _GEN_CHUNK)
@@ -397,4 +501,5 @@ __all__ = [
     "SourceStats",
     "SyntheticTokenSource",
     "as_source",
+    "clear_stats_memo",
 ]

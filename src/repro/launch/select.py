@@ -117,6 +117,9 @@ def main(argv=None) -> dict:
                     help="streamed blocks placed ahead of device "
                          "accumulation (0 = synchronous placer)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--output", default=None,
+                    help="write the full MRMRResult (selected, gains, "
+                         "relevance, provenance) as JSON to this path")
     args = ap.parse_args(argv)
 
     X, y, source = _load_input(args)
@@ -167,6 +170,12 @@ def main(argv=None) -> dict:
     if plan.encoding == "streaming":
         out["block_obs"] = plan.block_obs  # effective (rounded) size
         out["prefetch"] = plan.prefetch
+    if args.output:
+        # The same MRMRResult.to_json payload the service's result cache
+        # persists — MRMRResult.from_json round-trips it.
+        with open(args.output, "w") as f:
+            f.write(sel.result_.to_json())
+        out["output"] = args.output
     print(json.dumps(out))
     return out
 

@@ -1,1 +1,12 @@
 from repro.serve.engine import ServeEngine, Request  # noqa: F401
+from repro.serve.selection import (  # noqa: F401
+    Backpressure,
+    JobCancelled,
+    JobFailed,
+    JobInfo,
+    ResultCache,
+    SelectionRequest,
+    SelectionService,
+    UnknownJob,
+    parse_source_ref,
+)

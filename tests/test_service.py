@@ -1,0 +1,513 @@
+"""Selection-as-a-service: cache, coalescing, backpressure, lifecycle.
+
+Covers the `repro.serve.selection` subsystem plus its substrate: the
+content-addressed source fingerprints and fingerprint-keyed stats memo
+(`repro.data.sources`), `MRMRResult` JSON round-trips, the warm jit
+caches (`repro.core.selector` / `repro.core.streaming`) and
+`retry_with_backoff` (`repro.runtime.resilience`).
+"""
+
+import json
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streaming as streaming_mod
+from repro.core.mrmr import MRMRResult, WarmJitCache
+from repro.core.scores import MIScore
+from repro.core.selector import (
+    MRMRSelector,
+    clear_engine_fn_cache,
+    engine_fn_cache_stats,
+)
+from repro.data import sources as sources_mod
+from repro.data.sources import ArraySource, CSVSource, CorralSource, NpySource
+from repro.runtime.resilience import TransientError, retry_with_backoff
+from repro.serve.selection import (
+    Backpressure,
+    CANCELLED,
+    DONE,
+    FAILED,
+    JobCancelled,
+    JobFailed,
+    QUEUED,
+    ResultCache,
+    SelectionService,
+    UnknownJob,
+    parse_source_ref,
+)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_memos():
+    sources_mod.clear_stats_memo()
+    yield
+    sources_mod.clear_stats_memo()
+
+
+def _dummy_result(tag: int = 0) -> MRMRResult:
+    return MRMRResult(
+        selected=jnp.asarray([tag, tag + 1], jnp.int32),
+        gains=jnp.asarray([1.5, 0.5], jnp.float32),
+        relevance=jnp.asarray([0.1, 0.2, 0.3], jnp.float32),
+        criterion="mid",
+        engine="streaming",
+    )
+
+
+def _assert_results_equal(a: MRMRResult, b: MRMRResult):
+    np.testing.assert_array_equal(np.asarray(a.selected), np.asarray(b.selected))
+    np.testing.assert_allclose(np.asarray(a.gains), np.asarray(b.gains))
+    if a.relevance is None:
+        assert b.relevance is None
+    else:
+        np.testing.assert_allclose(
+            np.asarray(a.relevance), np.asarray(b.relevance), equal_nan=True
+        )
+    assert a.criterion == b.criterion
+    assert a.engine == b.engine
+
+
+# ---------------------------------------------------------------------------
+# MRMRResult JSON round-trip
+# ---------------------------------------------------------------------------
+
+class TestResultJSON:
+    def test_roundtrip(self):
+        res = _dummy_result()
+        back = MRMRResult.from_json(res.to_json())
+        _assert_results_equal(res, back)
+
+    def test_roundtrip_nan_relevance_strict_json(self):
+        # CustomScore fits NaN-fill the relevance; the payload must stay
+        # strict JSON (no bare NaN tokens) and decode back to NaN.
+        res = MRMRResult(
+            selected=jnp.asarray([1], jnp.int32),
+            gains=jnp.asarray([float("inf")], jnp.float32),
+            relevance=jnp.asarray([float("nan"), 2.0], jnp.float32),
+        )
+        payload = res.to_json()
+        json.loads(payload)  # strict parser accepts it
+        assert "NaN" not in payload and "Infinity" not in payload
+        back = MRMRResult.from_json(payload)
+        assert np.isnan(np.asarray(back.relevance)[0])
+        assert np.isinf(np.asarray(back.gains)[0])
+
+    def test_roundtrip_none_relevance(self):
+        res = MRMRResult(
+            selected=jnp.asarray([0], jnp.int32),
+            gains=jnp.asarray([1.0], jnp.float32),
+        )
+        back = MRMRResult.from_json(res.to_json())
+        assert back.relevance is None
+
+
+# ---------------------------------------------------------------------------
+# source fingerprints + stats memo
+# ---------------------------------------------------------------------------
+
+class TestFingerprint:
+    def test_corral_pure_function_of_params(self):
+        assert (
+            CorralSource(512, 16, seed=3).fingerprint()
+            == CorralSource(512, 16, seed=3).fingerprint()
+        )
+        assert (
+            CorralSource(512, 16, seed=3).fingerprint()
+            != CorralSource(512, 16, seed=4).fingerprint()
+        )
+
+    def test_array_content_addressed(self):
+        X = np.arange(32, dtype=np.int32).reshape(8, 4) % 2
+        y = np.arange(8, dtype=np.int32) % 2
+        assert (
+            ArraySource(X, y).fingerprint()
+            == ArraySource(X.copy(), y.copy()).fingerprint()
+        )
+        X2 = X.copy()
+        X2[0, 0] ^= 1
+        assert ArraySource(X, y).fingerprint() != ArraySource(X2, y).fingerprint()
+
+    def test_npy_stat_based(self, tmp_path):
+        xp, yp = str(tmp_path / "X.npy"), str(tmp_path / "y.npy")
+        CorralSource(256, 16, seed=0).to_npy(xp, yp)
+        assert NpySource(xp, yp).fingerprint() == NpySource(xp, yp).fingerprint()
+
+    def test_csv_knobs_in_identity(self, tmp_path):
+        p = str(tmp_path / "d.csv")
+        with open(p, "w") as f:
+            f.write("1,0,1\n0,1,0\n")
+        assert (
+            CSVSource(p, dtype=np.int32).fingerprint()
+            != CSVSource(p, dtype=np.int32, target_col=0).fingerprint()
+        )
+
+    def test_stats_memoized_across_instances(self):
+        class CountingCorral(CorralSource):
+            scans = []
+
+            def iter_blocks(self, block_obs):
+                CountingCorral.scans.append(block_obs)
+                return super().iter_blocks(block_obs)
+
+        CountingCorral.scans = []
+        s1 = CountingCorral(256, 16, seed=0)
+        st1 = s1.stats()
+        assert len(CountingCorral.scans) == 1  # one real scan
+        # A FRESH instance on the same content: served from the
+        # fingerprint-keyed memo, zero passes of I/O.
+        s2 = CountingCorral(256, 16, seed=0)
+        st2 = s2.stats()
+        assert st2 == st1
+        assert len(CountingCorral.scans) == 1
+
+
+# ---------------------------------------------------------------------------
+# result cache
+# ---------------------------------------------------------------------------
+
+class TestResultCache:
+    def test_lru_eviction_bound(self):
+        cache = ResultCache(capacity=2)
+        for i in range(3):
+            cache.put(f"k{i}", _dummy_result(i))
+        assert len(cache) == 2
+        st = cache.stats()
+        assert st["evictions"] == 1
+        assert cache.get("k0") is None  # oldest evicted
+        assert cache.get("k1") is not None and cache.get("k2") is not None
+
+    def test_lru_recency_on_get(self):
+        cache = ResultCache(capacity=2)
+        cache.put("a", _dummy_result(0))
+        cache.put("b", _dummy_result(1))
+        cache.get("a")  # refresh a; b becomes LRU
+        cache.put("c", _dummy_result(2))
+        assert cache.get("b") is None
+        assert cache.get("a") is not None
+
+    def test_persistence_roundtrip(self, tmp_path):
+        d = str(tmp_path / "cache")
+        ResultCache(capacity=4, persist_dir=d).put("k", _dummy_result(7))
+        fresh = ResultCache(capacity=4, persist_dir=d)  # new "process"
+        got = fresh.get("k")
+        assert got is not None
+        _assert_results_equal(got, _dummy_result(7))
+        assert fresh.stats()["disk_hits"] == 1
+
+
+# ---------------------------------------------------------------------------
+# the service
+# ---------------------------------------------------------------------------
+
+def _probe_source(rows=64, cols=16):
+    """ArraySource whose iter_blocks calls are counted — the I/O probe."""
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 2, size=(rows, cols)).astype(np.int32)
+    y = rng.integers(0, 2, size=(rows,)).astype(np.int32)
+
+    class Probe(ArraySource):
+        passes = 0
+
+        def iter_blocks(self, block_obs):
+            Probe.passes += 1
+            return super().iter_blocks(block_obs)
+
+    return Probe(X, y), Probe
+
+
+class TestServiceCache:
+    def test_second_identical_submission_hits_cache_zero_io(self):
+        source, Probe = _probe_source()
+        score = MIScore(num_values=2, num_classes=2)  # skip the stats scan
+        with SelectionService(workers=1, queue_capacity=4) as svc:
+            j1 = svc.submit(source, num_select=2, score=score, block_obs=32)
+            r1 = svc.result(j1, timeout=120)
+            passes_after_first = Probe.passes
+            assert passes_after_first >= 2  # fingerprint + >=1 scoring pass
+            j2 = svc.submit(source, num_select=2, score=score, block_obs=32)
+            r2 = svc.result(j2, timeout=10)
+            # Zero additional engine or I/O passes: pure cache read.
+            assert Probe.passes == passes_after_first
+            info = svc.poll(j2)
+            assert info.state == DONE and info.cache_hit
+            assert svc.stats()["cache"]["hits"] == 1
+            _assert_results_equal(r1, r2)
+
+    def test_block_obs_not_in_cache_key(self):
+        # Selections are block-size independent, so a different execution
+        # geometry of the same fit must share the cache line.
+        source, Probe = _probe_source()
+        score = MIScore(num_values=2, num_classes=2)
+        with SelectionService(workers=1) as svc:
+            j1 = svc.submit(source, num_select=2, score=score, block_obs=32)
+            svc.result(j1, timeout=120)
+            j2 = svc.submit(source, num_select=2, score=score, block_obs=16)
+            assert svc.poll(j2).cache_hit
+
+    def test_submit_source_ref_and_arrays(self):
+        with SelectionService(workers=1, fit_fn=lambda req: _dummy_result()) as svc:
+            j1 = svc.submit("corral:256x16:0", num_select=2)
+            assert svc.result(j1, timeout=30) is not None
+            X = np.zeros((8, 4), np.int32)
+            y = np.zeros((8,), np.int32)
+            j2 = svc.submit((X, y), num_select=2)
+            assert svc.result(j2, timeout=30) is not None
+
+    def test_parse_source_ref_errors(self):
+        with pytest.raises(ValueError):
+            parse_source_ref("lonely.npy")
+        with pytest.raises(ValueError):
+            parse_source_ref("corral:banana")
+
+
+class TestServiceCoalescing:
+    def test_stampede_runs_engine_exactly_once(self):
+        n_threads = 6
+        calls = []
+        release = threading.Event()
+
+        def slow_fit(request):
+            calls.append(request.cache_key())
+            release.wait(timeout=30)
+            return _dummy_result()
+
+        source = CorralSource(256, 16, seed=0)
+        source.fingerprint()  # pre-memoise: submits race on it otherwise
+        job_ids = [None] * n_threads
+        barrier = threading.Barrier(n_threads)
+        with SelectionService(
+            workers=2, queue_capacity=8, fit_fn=slow_fit
+        ) as svc:
+            def submit(i):
+                barrier.wait()
+                job_ids[i] = svc.submit(
+                    source, num_select=2,
+                    score=MIScore(num_values=2, num_classes=2),
+                )
+
+            threads = [
+                threading.Thread(target=submit, args=(i,))
+                for i in range(n_threads)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join(timeout=30)
+            release.set()
+            results = [svc.result(j, timeout=30) for j in job_ids]
+            # Exactly ONE engine invocation; everyone shares its result.
+            assert len(calls) == 1
+            for r in results:
+                _assert_results_equal(r, results[0])
+            st = svc.stats()
+            assert st["coalesced"] == n_threads - 1
+            coalesced = [
+                svc.poll(j).coalesced_into is not None for j in job_ids
+            ]
+            assert sum(coalesced) == n_threads - 1
+
+
+class TestServiceBackpressure:
+    def test_overflow_rejects_with_retry_after(self):
+        started = threading.Event()
+        release = threading.Event()
+
+        def blocking_fit(request):
+            started.set()
+            release.wait(timeout=30)
+            return _dummy_result()
+
+        X = np.zeros((8, 4), np.int32)
+        y = np.zeros((8,), np.int32)
+        score = MIScore(num_values=2, num_classes=2)
+        with SelectionService(
+            workers=1, queue_capacity=1, fit_fn=blocking_fit
+        ) as svc:
+            # Distinct num_selects -> distinct keys (no coalescing).
+            j1 = svc.submit(ArraySource(X, y), num_select=1, score=score)
+            assert started.wait(timeout=10)  # worker holds job 1
+            j2 = svc.submit(ArraySource(X, y), num_select=2, score=score)
+            with pytest.raises(Backpressure) as exc:
+                svc.submit(ArraySource(X, y), num_select=3, score=score)
+            assert exc.value.retry_after_s > 0
+            assert svc.stats()["queue"]["rejected"] == 1
+            release.set()
+            assert svc.result(j1, timeout=30) is not None
+            assert svc.result(j2, timeout=30) is not None
+
+
+class TestServiceLifecycle:
+    def _blocking_service(self, **kw):
+        started = threading.Event()
+        release = threading.Event()
+
+        def blocking_fit(request):
+            started.set()
+            release.wait(timeout=30)
+            return _dummy_result()
+
+        svc = SelectionService(workers=1, fit_fn=blocking_fit, **kw)
+        return svc, started, release
+
+    def test_cancel_queued_job(self):
+        svc, started, release = self._blocking_service()
+        X = np.zeros((8, 4), np.int32)
+        y = np.zeros((8,), np.int32)
+        score = MIScore(num_values=2, num_classes=2)
+        try:
+            j1 = svc.submit(ArraySource(X, y), num_select=1, score=score)
+            assert started.wait(timeout=10)
+            j2 = svc.submit(ArraySource(X, y), num_select=2, score=score)
+            assert svc.poll(j2).state == QUEUED
+            assert svc.cancel(j2)
+            assert svc.poll(j2).state == CANCELLED
+            with pytest.raises(JobCancelled):
+                svc.result(j2, timeout=5)
+            # A RUNNING primary cannot be cancelled.
+            assert not svc.cancel(j1)
+            release.set()
+            assert svc.result(j1, timeout=30) is not None
+        finally:
+            release.set()
+            svc.close()
+
+    def test_unknown_job(self):
+        with SelectionService(workers=1) as svc:
+            with pytest.raises(UnknownJob):
+                svc.poll("job-9999")
+
+    def test_failed_job_reports_error(self):
+        def bad_fit(request):
+            raise ValueError("boom")
+
+        with SelectionService(workers=1, fit_fn=bad_fit) as svc:
+            j = svc.submit(
+                "corral:256x16:0", num_select=2,
+                score=MIScore(num_values=2, num_classes=2),
+            )
+            with pytest.raises(JobFailed, match="boom"):
+                svc.result(j, timeout=30)
+            info = svc.poll(j)
+            assert info.state == FAILED and "boom" in info.error
+
+    def test_transient_failure_retried_to_done(self):
+        attempts = []
+
+        def flaky_fit(request):
+            attempts.append(1)
+            if len(attempts) == 1:
+                raise TransientError("worker preempted")
+            return _dummy_result()
+
+        with SelectionService(
+            workers=1, fit_fn=flaky_fit, max_attempts=2,
+            retry_sleep=lambda s: None,
+        ) as svc:
+            j = svc.submit(
+                "corral:256x16:0", num_select=2,
+                score=MIScore(num_values=2, num_classes=2),
+            )
+            assert svc.result(j, timeout=30) is not None
+            assert svc.poll(j).attempts == 2
+
+
+# ---------------------------------------------------------------------------
+# retry_with_backoff
+# ---------------------------------------------------------------------------
+
+class TestRetryWithBackoff:
+    def test_backs_off_then_succeeds(self):
+        delays, calls = [], []
+
+        def flaky():
+            calls.append(1)
+            if len(calls) < 3:
+                raise TransientError("flake")
+            return 42
+
+        out = retry_with_backoff(
+            flaky, max_attempts=3, base_delay_s=0.1, backoff=2.0,
+            sleep=delays.append,
+        )
+        assert out == 42
+        assert delays == [0.1, 0.2]  # exponential
+
+    def test_exhaustion_raises_last(self):
+        def always():
+            raise TransientError("never")
+
+        with pytest.raises(TransientError):
+            retry_with_backoff(
+                always, max_attempts=3, sleep=lambda s: None
+            )
+
+    def test_non_retryable_propagates_immediately(self):
+        calls = []
+
+        def bad():
+            calls.append(1)
+            raise ValueError("logic bug")
+
+        with pytest.raises(ValueError):
+            retry_with_backoff(bad, max_attempts=5, sleep=lambda s: None)
+        assert len(calls) == 1
+
+
+# ---------------------------------------------------------------------------
+# warm jit caches
+# ---------------------------------------------------------------------------
+
+class TestWarmJitCaches:
+    def test_warm_jit_cache_lru(self):
+        cache = WarmJitCache(capacity=2)
+        built = []
+
+        def make(tag):
+            def build():
+                built.append(tag)
+                return tag
+
+            return build
+
+        assert cache.get_or_build("a", make("a")) == "a"
+        assert cache.get_or_build("a", make("a")) == "a"  # hit
+        cache.get_or_build("b", make("b"))
+        cache.get_or_build("c", make("c"))  # evicts a
+        st = cache.stats()
+        assert st["hits"] == 1 and st["evictions"] == 1
+        cache.get_or_build("a", make("a"))  # rebuilt
+        assert built == ["a", "b", "c", "a"]
+
+    def test_warm_jit_cache_unhashable_key_bypasses(self):
+        cache = WarmJitCache(capacity=2)
+        assert cache.get_or_build(["not", "hashable"], lambda: 7) == 7
+        assert cache.stats()["uncacheable"] == 1
+
+    def test_repeat_in_memory_fit_reuses_engine_fn(self):
+        rng = np.random.default_rng(0)
+        X = rng.integers(0, 2, size=(64, 8)).astype(np.int32)
+        y = rng.integers(0, 2, size=(64,)).astype(np.int32)
+        clear_engine_fn_cache()
+        MRMRSelector(num_select=3).fit(X, y)
+        miss0 = engine_fn_cache_stats()["misses"]
+        hits0 = engine_fn_cache_stats()["hits"]
+        MRMRSelector(num_select=3).fit(X, y)
+        st = engine_fn_cache_stats()
+        assert st["misses"] == miss0  # nothing rebuilt
+        assert st["hits"] == hits0 + 1
+
+    def test_repeat_streaming_fit_reuses_acc_fn(self):
+        source = CorralSource(512, 16, seed=0)
+        streaming_mod.clear_acc_fn_cache()
+        MRMRSelector(num_select=2, block_obs=128).fit(source)
+        miss0 = streaming_mod.acc_fn_cache_stats()["misses"]
+        MRMRSelector(num_select=2, block_obs=128).fit(
+            CorralSource(512, 16, seed=0)
+        )
+        st = streaming_mod.acc_fn_cache_stats()
+        assert st["misses"] == miss0
+        assert st["hits"] >= 1
