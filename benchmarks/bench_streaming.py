@@ -9,7 +9,12 @@ in-memory vs ``block_obs·N`` + statistics for streaming.  ``--prefetch
 0,2`` turns the same table into a synchronous-vs-double-buffered placer
 comparison.  A second **wide** dataset (``--wide-rows``/``--wide-cols``,
 ``m/n <= 0.25`` — the regime where feature-sharded statistics matter)
-runs the same grid against the in-memory alternative engine.
+runs the same grid against the in-memory alternative engine.  A third
+**continuous** float dataset (``--cont-rows``/``--cont-cols``/``--bins``)
+compares exact MI on sketch-binned codes (``bins=``, in-memory vs
+streaming, selections must agree) against the Pearson approximation —
+the only pre-binning continuous path — and times the one-off quantile
+sketch pass that cuts the bin edges.
 
 ``--criterion mid,miq`` adds a greedy-objective axis: the FIRST criterion
 runs the full (block x prefetch) grid on both datasets; each further
@@ -38,7 +43,8 @@ import time
 
 import numpy as np
 
-from repro import MIScore, MRMRSelector
+from repro import MIScore, MRMRSelector, PearsonMIScore
+from repro.data.binning import clear_binner_memo, fit_binned
 from repro.data.sources import CorralSource, NpySource
 
 
@@ -127,6 +133,84 @@ def _bench_dataset(
     return records
 
 
+def _bench_continuous(
+    rows: int, cols: int, select: int, bins: int, blocks, prefetch: int,
+    seed: int, tmp: str, repeats: int,
+) -> list:
+    """Continuous float dataset: exact-MI-on-binned-codes (``bins=``) vs the
+    Pearson approximation (the only pre-binning continuous path), plus the
+    cost of the one-off sketch pass that cuts the bin edges."""
+    x_path = os.path.join(tmp, "contX.npy")
+    y_path = os.path.join(tmp, "conty.npy")
+    rng = np.random.default_rng(seed)
+    y = rng.integers(0, 2, size=rows).astype(np.int32)
+    X = rng.normal(size=(rows, cols)).astype(np.float32)
+    k = min(8, cols)
+    X[:, :k] += y[:, None] * np.linspace(1.5, 0.3, k)[None, :].astype(
+        np.float32
+    )
+    np.save(x_path, X)
+    np.save(y_path, y)
+
+    # The sketch pass is the only cost bins= adds on top of the discrete
+    # streaming path: one extra read of the source.  Cleared memo each
+    # repeat so every timing pays the full pass.
+    dt = float("inf")
+    for _ in range(repeats):
+        clear_binner_memo()
+        t0 = time.time()
+        fit_binned(NpySource(x_path, y_path), bins, block_obs=max(blocks))
+        dt = min(dt, time.time() - t0)
+    records = [dict(
+        mode="cont_sketch_pass", rows=rows, cols=cols, select=select,
+        seconds=round(dt, 3), rows_per_s=round(rows / dt),
+        peak_input_bytes=max(blocks) * cols * 4, repeats=repeats,
+        selected=[], criterion="mid", bins=bins,
+    )]
+
+    records.append(_fit_record(
+        "cont_binned_in_memory", rows, cols, select,
+        lambda: MRMRSelector(num_select=select, bins=bins).fit(X, y),
+        X.nbytes, repeats,
+    ))
+    base = records[-1]["selected"]
+    for bo in blocks:
+        rec = _fit_record(
+            f"cont_binned_streaming@{bo}+pf{prefetch}", rows, cols, select,
+            lambda bo=bo: MRMRSelector(
+                num_select=select, bins=bins, block_obs=bo,
+                prefetch=prefetch,
+            ).fit(NpySource(x_path, y_path)),
+            bo * cols * 4, repeats,
+        )
+        rec["block_obs"] = bo
+        rec["prefetch"] = prefetch
+        if rec["selected"] != base:
+            raise SystemExit(
+                f"{rec['mode']} diverged: {rec['selected']} != {base}"
+            )
+        records.append(rec)
+    # bins-off comparator: the Pearson approximation is the only engine
+    # path that accepts raw floats.  Different score, so selections may
+    # legitimately differ — no divergence check, just the throughput cell.
+    bo = max(blocks)
+    rec = _fit_record(
+        f"cont_pearson_streaming@{bo}+pf{prefetch}", rows, cols, select,
+        lambda: MRMRSelector(
+            num_select=select, score=PearsonMIScore(), block_obs=bo,
+            prefetch=prefetch,
+        ).fit(NpySource(x_path, y_path)),
+        bo * cols * 4, repeats,
+    )
+    rec["block_obs"] = bo
+    rec["prefetch"] = prefetch
+    records.append(rec)
+    for r in records:
+        r.setdefault("criterion", "mid")
+        r["bins"] = bins if "pearson" not in r["mode"] else 0
+    return records
+
+
 def main(argv=None) -> list:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--rows", type=int, default=200_000)
@@ -141,6 +225,13 @@ def main(argv=None) -> list:
     ap.add_argument("--wide-cols", type=int, default=16384)
     ap.add_argument("--wide-block-obs", default="1024,4096",
                     help="comma-separated streaming block sizes (wide case)")
+    ap.add_argument("--cont-rows", type=int, default=100_000,
+                    help="continuous-case rows (0 skips the continuous case)")
+    ap.add_argument("--cont-cols", type=int, default=64)
+    ap.add_argument("--cont-block-obs", default="16384,65536",
+                    help="comma-separated streaming block sizes (continuous)")
+    ap.add_argument("--bins", type=int, default=16,
+                    help="equal-frequency bins for the continuous case")
     ap.add_argument("--criterion", default="mid,miq",
                     help="comma-separated greedy objectives; the first runs "
                          "the full grid, the rest one tall cell each "
@@ -182,6 +273,12 @@ def main(argv=None) -> list:
                 "wide", args.wide_rows, args.wide_cols, args.select,
                 [int(b) for b in args.wide_block_obs.split(",")], prefetches,
                 args.seed + 1, tmp, args.repeats, criterion=criteria[0],
+            )
+        if args.cont_rows > 0:
+            records += _bench_continuous(
+                args.cont_rows, args.cont_cols, args.select, args.bins,
+                [int(b) for b in args.cont_block_obs.split(",")],
+                prefetches[-1], args.seed + 2, tmp, args.repeats,
             )
 
     for r in records:

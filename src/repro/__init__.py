@@ -87,6 +87,35 @@ own fold with :func:`~repro.core.criteria.register_criterion`::
         name = "mid2x"     # then: MRMRSelector(10, criterion="mid2x")
         ...                # init_state / update / objective (pure jnp)
 
+Binning
+-------
+
+MI scoring is discrete, but most numeric-tabular data is continuous.
+``bins=`` discretises on the fly at streaming scale: one cheap pass
+accumulates a mergeable per-feature quantile sketch
+(:class:`~repro.data.binning.QuantileSketch` — KLL-style bounded buffers,
+``merge()``-able across blocks and shards), ``bins - 1`` equal-frequency
+edges are cut from it, and every subsequent block encodes to int codes in
+``[0, bins)`` on the way into the contingency sums — on the device, fused
+with the accumulate (Pallas searchsorted kernel on TPU), so raw float
+blocks never round-trip through host memory as codes::
+
+    sel = MRMRSelector(num_select=10, bins=32).fit(source)   # float source
+    sel = MRMRSelector(num_select=10, bins=32).fit(X, y)     # float array
+    sel.plan_.bins                                           # 32
+
+Selections agree between the in-memory and streaming paths at every block
+size (the sketch compacts at exact capacity boundaries, so the edges are
+a pure function of the row stream).  Wrap explicitly with
+:class:`~repro.data.binning.BinnedSource` to reuse one fitted binner; its
+``fingerprint()`` derives from the base source's fingerprint × the bin
+config, so the service's result cache distinguishes ``bins=16`` from
+``bins=64`` for free, and fitted binners are memoised per fingerprint
+(repeat submissions never re-sketch).  A float input headed down the MI
+path *without* ``bins=`` fails at fit time with a pointer here instead of
+scoring truncated categories.  (CLI: ``python -m repro.launch.select
+--input floats.csv --bins 32``.)
+
 Service
 -------
 
@@ -160,7 +189,7 @@ from repro.core import (  # noqa: F401
     register_engine,
 )
 
-__version__ = "1.3.0"
+__version__ = "1.4.0"
 
 __all__ = [
     "Criterion",

@@ -39,6 +39,7 @@ from repro.core import mrmr as mrmr_mod
 from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.mrmr import MRMRResult, WarmJitCache
 from repro.core.scores import MIScore, PearsonMIScore, ScoreFn, _OOR
+from repro.data.binning import BinnedSource
 from repro.data.sources import ArraySource, DataSource
 from repro.dist.meshes import factor_mesh, make_mesh
 from repro.dist.sharding import axes_tuple as _axes_tuple, mesh_extent
@@ -95,6 +96,8 @@ class SelectionPlan:
                                       # device accumulation (0 = synchronous)
     criterion: object = "mid"         # greedy objective (name or Criterion);
                                       # appended last for positional compat
+    bins: int | None = None           # quantile-binned fit: codes per
+                                      # feature (None = data was discrete)
 
     @property
     def mesh_axes(self) -> tuple:
@@ -506,6 +509,13 @@ class MRMRSelector:
       prefetch: streaming fits only — host blocks read, padded and placed
         ahead of device accumulation on a background thread (double
         buffering); 0 restores the synchronous placer.
+      bins: discretise continuous features on the fly into this many
+        equal-frequency bins (one streaming quantile-sketch pass; see
+        :mod:`repro.data.binning`), so float data runs the exact discrete
+        MI path instead of the Pearson approximation.  Applies to float
+        arrays and continuous ``DataSource``s when the score is MI (or
+        auto); discrete data and explicit non-MI scores ignore it.  The
+        resolved ``plan_.bins`` records what ran.
 
     Streamed fits follow the same §III aspect rule as in-memory plans:
     tall sources shard blocks over ``obs_axes``, wide sources shard blocks
@@ -529,6 +539,7 @@ class MRMRSelector:
     # appended after the pre-1.2 fields so positional construction keeps
     # its old meaning
     criterion: Criterion | str = "mid"
+    bins: int | None = None
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
@@ -630,6 +641,53 @@ class MRMRSelector:
         if st.discrete:
             return MIScore(num_values=st.num_values, num_classes=st.num_classes)
         return PearsonMIScore()
+
+    def _continuous_mi_error(self, what: str) -> ValueError:
+        return ValueError(
+            f"MIScore needs discrete categories but {what} holds continuous "
+            "values: pass bins= to quantile-discretise on the fly — "
+            "MRMRSelector(num_select=..., bins=32) — or score with "
+            "PearsonMIScore()"
+        )
+
+    def _maybe_bin_source(self, source: DataSource) -> DataSource:
+        """Wrap a continuous source for on-the-fly discretisation when
+        ``bins=`` is set and the fit is headed down the discrete MI path
+        (score None or MI).  Discrete sources and explicit non-MI scores
+        pass through untouched."""
+        if self.bins is None or isinstance(source, BinnedSource):
+            return source
+        if self.score is not None and not isinstance(self.score, MIScore):
+            return source  # Pearson/custom consume continuous data natively
+        if self._source_is_discrete(source):
+            return source
+        return BinnedSource(source, self.bins, fit_block_obs=self.block_obs)
+
+    def _source_is_discrete(self, source: DataSource) -> bool:
+        """Discrete-vs-continuous routing, free when the source's
+        ``feature_dtype`` is statically known (no ``iter_blocks`` pass —
+        the maxrel path's single-pass I/O promise depends on this)."""
+        dt = source.feature_dtype
+        if dt is not None:
+            return not np.issubdtype(dt, np.floating)
+        return source.stats(self.block_obs).discrete
+
+    def _bin_score(self, binned: BinnedSource) -> ScoreFn:
+        """Score for a binned fit: auto-sized MI, or the user's MIScore
+        checked against the code range (codes land in [0, bins))."""
+        if self.score is None:
+            return MIScore(
+                num_values=binned.bins,
+                num_classes=binned.stats().num_classes,
+            )
+        if isinstance(self.score, MIScore) and self.score.num_values < binned.bins:
+            raise ValueError(
+                f"score num_values={self.score.num_values} < bins="
+                f"{binned.bins}: bin codes in [0, {binned.bins}) would "
+                "one-hot to all-zero rows and vanish from the counts; "
+                "drop the explicit score or set num_values >= bins"
+            )
+        return self.score
 
     def _resolve_stream_plan(
         self, source: DataSource, score: ScoreFn
@@ -738,8 +796,20 @@ class MRMRSelector:
                 "(materialise the source yourself to force another engine)"
             )
         check_num_select(self.num_select, source.num_features)
-        score = self._resolve_source_score(source)
+        source = self._maybe_bin_source(source)
+        if isinstance(source, BinnedSource):
+            score = self._bin_score(source)
+        else:
+            score = self._resolve_source_score(source)
+            if isinstance(score, MIScore) and not self._source_is_discrete(
+                source
+            ):
+                # Explicit MI on float blocks would silently truncate to
+                # int32 inside the one-hot encode — fail actionably here.
+                raise self._continuous_mi_error("the source")
         plan = self._resolve_stream_plan(source, score)
+        if isinstance(source, BinnedSource):
+            plan = dataclasses.replace(plan, bins=source.bins)
         mesh = self._resolve_mesh(plan)
         engine = get_engine("streaming")
         res = engine(source, None, num_select=self.num_select, plan=plan,
@@ -773,13 +843,41 @@ class MRMRSelector:
         if X.ndim != 2 or y.shape[0] != X.shape[0]:
             raise ValueError(f"bad shapes X{X.shape} y{y.shape}")
         check_num_select(self.num_select, X.shape[1])
-        score = self._resolve_score(X, y)
+        discrete_X = bool(
+            jnp.issubdtype(X.dtype, jnp.integer) or X.dtype == jnp.bool_
+        )
+        plan_bins = None
+        if (
+            self.bins is not None
+            and not discrete_X
+            and (self.score is None or isinstance(self.score, MIScore))
+        ):
+            # In-memory binned fit: one sketch pass over the wrapped array,
+            # then the discrete engines consume the int codes — same edges
+            # (and hence same selection) as the streaming path.
+            binned = BinnedSource(
+                ArraySource(np.asarray(X), np.asarray(y)),
+                self.bins,
+                fit_block_obs=self.block_obs,
+            )
+            score = self._bin_score(binned)
+            codes, labels = binned.materialize(self.block_obs)
+            X, y = jnp.asarray(codes), jnp.asarray(labels)
+            plan_bins = binned.bins
+        else:
+            score = self._resolve_score(X, y)
+            if isinstance(score, MIScore) and not discrete_X:
+                # The conventional engine would silently astype(int32) the
+                # float columns — truncated categories, wrong MI.
+                raise self._continuous_mi_error("X")
         # Discrete MI scores need integral class labels; every other score
         # (Pearson, custom) keeps continuous targets intact.
         y = y.astype(jnp.int32 if isinstance(score, MIScore) else jnp.float32)
         plan = self._resolve_plan(X.shape, score)
         if plan.score is None:
             plan = dataclasses.replace(plan, score=score)
+        if plan_bins is not None:
+            plan = dataclasses.replace(plan, bins=plan_bins)
         mesh = self._resolve_mesh(plan)
         engine = get_engine(plan.encoding)
         res = engine(X, y, num_select=self.num_select, plan=plan, mesh=mesh)

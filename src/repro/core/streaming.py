@@ -47,10 +47,13 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh
 
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.mrmr import MRMRResult, WarmJitCache
-from repro.core.scores import ScoreFn
+from repro.core.scores import MIScore, ScoreFn
 from repro.core.selector import check_num_select, register_engine
+from repro.data.binning import BinnedSource, _as_class_labels
 from repro.data.sources import DataSource, as_source
 from repro.dist.streaming import BlockPlacer, PrefetchPlacer
 
@@ -64,10 +67,15 @@ _NEG_INF = float("-inf")
 _ACC_FN_CACHE = WarmJitCache(capacity=32)
 
 
-def _cached_acc_fn(score: ScoreFn, placer: BlockPlacer, mesh: Mesh | None):
+def _cached_acc_fn(
+    score: ScoreFn,
+    placer: BlockPlacer,
+    mesh: Mesh | None,
+    num_edges: int | None = None,
+):
     key = (
         "acc_fn", score, mesh, placer.block_obs, placer.padded_features,
-        placer.obs_axes, placer.feat_axes,
+        placer.obs_axes, placer.feat_axes, num_edges,
     )
 
     def build():
@@ -77,9 +85,41 @@ def _cached_acc_fn(score: ScoreFn, placer: BlockPlacer, mesh: Mesh | None):
         shardings = placer.state_shardings(
             score.init_state(placer.padded_features, "class")
         )
-        return jax.jit(score.accumulate, out_shardings=shardings)
+        if num_edges is None:
+            return jax.jit(score.accumulate, out_shardings=shardings)
+
+        from repro.kernels import ops  # lazy: avoids core<->kernels cycle
+
+        use_pallas = getattr(score, "use_pallas", "auto")
+
+        # Fused binned accumulate: the raw float block encodes to bin codes
+        # on device (Pallas/jnp searchsorted) feeding straight into the
+        # one-hot contingency sum — no int block round-trips through host
+        # memory.  Edges ride as a traced argument, so this compiles once
+        # per geometry, not per fitted-edge content.
+        def fused(state, X_block, target, valid, edges):
+            codes = ops.bin_codes(X_block, edges, use_pallas=use_pallas)
+            return score.accumulate(state, codes, target, valid)
+
+        return jax.jit(fused, out_shardings=shardings)
 
     return _ACC_FN_CACHE.get_or_build(key, build)
+
+
+def _placed_edges(edges: np.ndarray, placer: BlockPlacer):
+    """Land fitted bin edges (N, E) padded to the placer's feature extent
+    and sharded to match the block columns.  Pad rows are +inf so a padded
+    feature's codes stay 0 (its statistics rows are sliced off anyway)."""
+    e = np.asarray(edges, np.float32)
+    pad = placer.padded_features - e.shape[0]
+    if pad:
+        e = np.concatenate(
+            [e, np.full((pad, e.shape[1]), np.inf, np.float32)]
+        )
+    if placer.mesh is not None:
+        spec = P(placer.feat_axes if placer.feat_axes else None, None)
+        return jax.device_put(e, NamedSharding(placer.mesh, spec))
+    return jnp.asarray(e)
 
 
 def acc_fn_cache_stats() -> dict:
@@ -97,12 +137,29 @@ def _placed_blocks(
     placer: BlockPlacer,
     target_col: int | None,
     prefetch: int,
+    binned: "BinnedSource | None" = None,
 ):
     """Iterate the source's blocks as placed (X, target, valid) tuples,
     extracting the pass's target column on the host; ``prefetch > 0`` runs
-    read+pad+place up to that many blocks ahead on a host thread."""
+    read+pad+place up to that many blocks ahead on a host thread.
+
+    With ``binned`` set the *base* source streams raw float32 blocks (the
+    device encodes them — the fused accumulate) and only the pass target
+    is encoded on the host: one column per redundancy pass, through the
+    same f32 ``searchsorted`` the kernel runs, so host and device codes
+    agree bitwise."""
 
     def host_blocks():
+        if binned is not None:
+            binner = binned.binner
+            for X_blk, y_blk in binned.base.iter_blocks(placer.block_obs):
+                X32 = np.asarray(X_blk, np.float32)
+                if target_col is None:
+                    tgt = _as_class_labels(y_blk)
+                else:
+                    tgt = binner.encode_column(target_col, X32[:, target_col])
+                yield X32, tgt
+            return
         for X_blk, y_blk in source.iter_blocks(placer.block_obs):
             tgt = y_blk if target_col is None else X_blk[:, target_col]
             yield X_blk, tgt
@@ -119,12 +176,13 @@ def _score_pass(
     placer: BlockPlacer,
     target_col: int | None,
     prefetch: int,
+    binned: "BinnedSource | None" = None,
 ) -> np.ndarray:
     """One full map-reduce pass: (N,) scores of every feature against the
     class (``target_col=None``) or against feature column ``target_col``."""
     kind = "class" if target_col is None else "feature"
     state = placer.place_state(score.init_state(placer.padded_features, kind))
-    for placed in _placed_blocks(source, placer, target_col, prefetch):
+    for placed in _placed_blocks(source, placer, target_col, prefetch, binned):
         state = acc_fn(state, *placed)
     scores = np.asarray(score.finalize(state), np.float32)
     return scores[: source.num_features]  # drop feature-padding columns
@@ -176,9 +234,30 @@ def mrmr_streaming(
         raise ValueError(f"prefetch must be >= 0, got {prefetch}")
 
     placer = BlockPlacer(block_obs, mesh, obs_axes, feat_axes, num_features=n)
-    acc_fn = _cached_acc_fn(score, placer, mesh)
 
-    rel = _score_pass(source, score, acc_fn, placer, None, prefetch)
+    # A BinnedSource scoring discrete MI streams FUSED: raw float blocks
+    # go to the device and are encoded there (Pallas searchsorted on TPU,
+    # jnp elsewhere) directly ahead of the contingency sum.  The sketch
+    # pass (memoised by fingerprint) happens here, before the first
+    # scoring pass.  Any other score falls back to host-side encoding
+    # through the wrapper's normal iter_blocks.
+    binned = (
+        source
+        if isinstance(source, BinnedSource) and isinstance(score, MIScore)
+        else None
+    )
+    if binned is not None:
+        edges = binned.binner.edges_
+        base_fn = _cached_acc_fn(score, placer, mesh, num_edges=edges.shape[1])
+        edges_dev = _placed_edges(edges, placer)
+
+        def acc_fn(state, X_block, target, valid):
+            return base_fn(state, X_block, target, valid, edges_dev)
+
+    else:
+        acc_fn = _cached_acc_fn(score, placer, mesh)
+
+    rel = _score_pass(source, score, acc_fn, placer, None, prefetch, binned)
     rel_j = jnp.asarray(rel)
     cstate = crit.init_state(n)
     mask = np.zeros((n,), bool)
@@ -196,7 +275,7 @@ def mrmr_streaming(
         if l + 1 < num_select and crit.needs_redundancy:
             # One redundancy pass of I/O vs the just-picked column; maxrel
             # (needs_redundancy=False) never re-reads the source.
-            red = _score_pass(source, score, acc_fn, placer, k, prefetch)
+            red = _score_pass(source, score, acc_fn, placer, k, prefetch, binned)
             cstate = crit.update(cstate, jnp.asarray(red), l)
     return MRMRResult(
         selected=jnp.asarray(selected),

@@ -1,3 +1,9 @@
+from repro.data.binning import (  # noqa: F401
+    BinnedSource,
+    QuantileBinner,
+    QuantileSketch,
+    fit_binned,
+)
 from repro.data.synthetic import corral_dataset, lm_token_batches  # noqa: F401
 from repro.data.pipeline import ShardedDataPipeline  # noqa: F401
 from repro.data.sources import (  # noqa: F401

@@ -109,6 +109,15 @@ class DataSource:
         concatenating to the full dataset in a block-size-independent order."""
         raise NotImplementedError
 
+    @property
+    def feature_dtype(self) -> "np.dtype | None":
+        """Static dtype of the feature blocks, when knowable WITHOUT I/O
+        (``None`` otherwise).  Lets the selector route discrete-vs-
+        continuous without spending an ``iter_blocks`` pass — a floating
+        hint means continuous, any other hint means discrete (matching
+        the dtype rule in :meth:`stats`)."""
+        return None
+
     # -- identity --------------------------------------------------------
 
     def fingerprint(self) -> str:
@@ -274,6 +283,10 @@ class ArraySource(DataSource):
     def num_features(self) -> int:
         return self.X.shape[1]
 
+    @property
+    def feature_dtype(self) -> np.dtype:
+        return self.X.dtype
+
     def iter_blocks(self, block_obs: int) -> Iterator[Block]:
         for lo in range(0, self.num_obs, block_obs):
             hi = min(lo + block_obs, self.num_obs)
@@ -350,6 +363,10 @@ class CSVSource(DataSource):
     @property
     def num_features(self) -> int:
         return self._num_cols - 1
+
+    @property
+    def feature_dtype(self) -> np.dtype:
+        return self.dtype
 
     def _parse(self, lines: list) -> Block:
         tgt = self.target_col % self._num_cols
@@ -439,6 +456,10 @@ class CorralSource(DataSource):
     @property
     def num_features(self) -> int:
         return self.num_cols
+
+    @property
+    def feature_dtype(self) -> np.dtype:
+        return np.dtype(np.int8)
 
     def _fingerprint_update(self, h) -> None:
         # The dataset is a pure function of these parameters — no I/O.

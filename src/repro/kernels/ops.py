@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.binning import bin_codes_pallas
 from repro.kernels.contingency import contingency_tables_pallas
 from repro.kernels.mi_score import mi_scores_pallas
 from repro.kernels.pearson import pearson_corr_pallas
@@ -70,6 +71,15 @@ def mi_scores(counts: Array, use_pallas="auto") -> Array:
     if run:
         return mi_scores_pallas(counts, interpret=interp)
     return ref.mi_scores(counts)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def bin_codes(X: Array, edges: Array, use_pallas="auto") -> Array:
+    """(B, N) floats x (N, E) sorted edges -> (B, N) int32 bin codes."""
+    run, interp = _decide(use_pallas)
+    if run:
+        return bin_codes_pallas(X, edges, interpret=interp)
+    return ref.bin_codes(X, edges)
 
 
 def mi_tables(

@@ -37,6 +37,19 @@ def mi_scores(counts: Array) -> Array:
     return _scores.mi_from_counts(counts)
 
 
+def bin_codes(X: Array, edges: Array) -> Array:
+    """(B, N) floats x (N, E) sorted edges -> (B, N) int32 bin codes.
+
+    ``searchsorted(side="right")`` per feature column; comparisons in f32
+    to match the host encoder and the Pallas kernel bit-for-bit.
+    """
+    return jax.vmap(
+        lambda e, col: jnp.searchsorted(e, col, side="right"),
+        in_axes=(0, 1),
+        out_axes=1,
+    )(edges.astype(jnp.float32), X.astype(jnp.float32)).astype(jnp.int32)
+
+
 def cor2mi(corr: Array) -> Array:
     """Listing-8 Gaussian MI approximation."""
     return _scores.cor2mi(corr)

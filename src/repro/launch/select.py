@@ -21,6 +21,12 @@
     PYTHONPATH=src REPRO_DEVICES=2 python -m repro.launch.select \
         --input wide.npy --target target.npy --block-obs 4096 --mesh-feat 2
 
+    # Continuous data with exact discrete MI: one streaming quantile-sketch
+    # pass cuts 32 equal-frequency bins per feature, then blocks encode to
+    # int codes on the fly (device-side, fused with the contingency sums):
+    PYTHONPATH=src python -m repro.launch.select \
+        --input floats.csv --bins 32 --block-obs 65536
+
 Inputs: ``--input data.npz`` (arrays ``X`` rows=observations, ``y``) loads
 in-memory; ``--input data.npy`` (+ ``--target target.npy``) memmaps and
 streams block-by-block through the ``streaming`` engine; ``--input
@@ -81,7 +87,9 @@ def _load_input(args):
             raise SystemExit("--target <y.npy> is required with a .npy input")
         return None, None, NpySource(path, args.target)
     if path.endswith(".csv"):
-        dtype = np.int32 if args.score == "mi" else np.float32
+        # Binned fits read float columns (the sketch pass discretises);
+        # plain MI expects pre-discretised integer categories.
+        dtype = np.int32 if args.score == "mi" and not args.bins else np.float32
         return None, None, CSVSource(path, dtype=dtype)
     raise SystemExit(f"unsupported --input {path!r} (.npz, .npy or .csv)")
 
@@ -116,6 +124,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--prefetch", type=int, default=2,
                     help="streamed blocks placed ahead of device "
                          "accumulation (0 = synchronous placer)")
+    ap.add_argument("--bins", type=int, default=0,
+                    help="quantile-discretise continuous features into this "
+                         "many equal-frequency bins (one streaming sketch "
+                         "pass) and select with exact discrete MI; 0 = off")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--output", default=None,
                     help="write the full MRMRResult (selected, gains, "
@@ -133,7 +145,13 @@ def main(argv=None) -> dict:
     except ValueError as e:
         raise SystemExit(f"--select invalid: {e}") from None
 
-    if args.score == "mi":
+    if args.bins:
+        # Auto-resolve: the selector wraps continuous inputs in a
+        # BinnedSource and sizes the MI score from the bin config.
+        score = None
+        if X is not None:
+            X = X.astype(np.float32)
+    elif args.score == "mi":
         score = MIScore(num_values=args.num_values,
                         num_classes=args.num_classes)
     else:
@@ -154,6 +172,7 @@ def main(argv=None) -> dict:
         encoding=args.encoding, mesh=mesh,
         incremental=bool(args.incremental), block=args.block,
         block_obs=args.block_obs, prefetch=args.prefetch,
+        bins=args.bins or None,
     )
     sel = sel.fit(source) if source is not None else sel.fit(X, y)
     plan = sel.plan_
@@ -170,6 +189,8 @@ def main(argv=None) -> dict:
     if plan.encoding == "streaming":
         out["block_obs"] = plan.block_obs  # effective (rounded) size
         out["prefetch"] = plan.prefetch
+    if plan.bins is not None:
+        out["bins"] = plan.bins
     if args.output:
         # The same MRMRResult.to_json payload the service's result cache
         # persists — MRMRResult.from_json round-trips it.

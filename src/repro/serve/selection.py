@@ -66,6 +66,7 @@ from repro.core.criteria import Criterion, resolve_criterion
 from repro.core.mrmr import MRMRResult
 from repro.core.scores import MIScore, PearsonMIScore, ScoreFn
 from repro.core.selector import check_num_select
+from repro.data.binning import BinnedSource
 from repro.data.sources import (
     CSVSource,
     CorralSource,
@@ -414,6 +415,7 @@ class SelectionService:
         encoding: str = "auto",
         block_obs: int = 65536,
         prefetch: int = 2,
+        bins: int | None = None,
     ) -> str:
         """Enqueue a fit; returns a job id immediately.
 
@@ -423,6 +425,13 @@ class SelectionService:
         (``cache_hit``); an identical request queued or running coalesces
         onto it; otherwise the job takes a queue slot — or, when the queue
         is full, ``submit`` raises :class:`Backpressure`.
+
+        ``bins`` quantile-discretises a continuous source on the fly
+        (:class:`~repro.data.binning.BinnedSource`); the binned
+        fingerprint folds the bin config into the cache key, so bins=16
+        and bins=64 runs of the same file never collide, and wrapping is
+        I/O-free at submit (the sketch pass runs inside the worker's fit,
+        memoised per fingerprint).
         """
         if self._closed:
             raise RuntimeError("SelectionService is closed")
@@ -433,6 +442,24 @@ class SelectionService:
         else:
             source = as_source(source)
         check_num_select(num_select, source.num_features)
+        if (
+            bins is not None
+            and not isinstance(source, BinnedSource)
+            and (score is None or isinstance(score, MIScore))
+            and (
+                np.issubdtype(source.feature_dtype, np.floating)
+                if source.feature_dtype is not None
+                else not source.stats(block_obs).discrete
+            )
+        ):
+            source = BinnedSource(source, int(bins), fit_block_obs=block_obs)
+        if isinstance(source, BinnedSource) and score is None:
+            # Sized from config + the sketch pass (memoised: repeat
+            # submissions of the same binned content never re-sketch).
+            score = MIScore(
+                num_values=source.bins,
+                num_classes=source.stats(block_obs).num_classes,
+            )
         if score is None:
             # stats() is memoised per source fingerprint, so repeat
             # submissions on the same file resolve without an I/O pass.

@@ -1,0 +1,291 @@
+"""Streaming discretisation: sketch accuracy/mergeability, binner and
+BinnedSource semantics, fingerprint identity, and the selector's ``bins=``
+front door (in-memory == streaming, early errors for continuous MI)."""
+
+import numpy as np
+import pytest
+
+from repro.core.scores import MIScore, PearsonMIScore
+from repro.core.selector import MRMRSelector
+from repro.data.binning import (
+    BinnedSource,
+    QuantileBinner,
+    QuantileSketch,
+    clear_binner_memo,
+    fit_binned,
+)
+from repro.data.sources import ArraySource
+
+
+def _columns(n, seed=0):
+    """Uniform, skewed (cubed exponential) and heavy-tie distributions —
+    the shapes that break naive samplers."""
+    rng = np.random.default_rng(seed)
+    return np.stack(
+        [
+            rng.uniform(size=n),
+            rng.exponential(size=n) ** 3,
+            np.repeat(np.arange(5), n // 5).astype(float),
+            rng.normal(size=n),
+        ],
+        axis=1,
+    )
+
+
+def _rank_of(col_sorted, value):
+    """Normalised rank interval [lo, hi] of ``value`` (ties widen it)."""
+    n = len(col_sorted)
+    lo = np.searchsorted(col_sorted, value, side="left") / n
+    hi = np.searchsorted(col_sorted, value, side="right") / n
+    return lo, hi
+
+
+class TestQuantileSketch:
+    QS = np.array([0.05, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95])
+
+    def test_rank_error_within_tolerance(self):
+        n = 40_000
+        X = _columns(n)
+        sk = QuantileSketch(X.shape[1], k=256, seed=0)
+        for i in range(0, n, 1000):
+            sk.update(X[i : i + 1000])
+        approx = sk.quantiles(self.QS)
+        for j in range(X.shape[1]):
+            col = np.sort(X[:, j])
+            for q, val in zip(self.QS, approx[j]):
+                lo, hi = _rank_of(col, val)
+                assert lo - 0.02 <= q <= hi + 0.02, (j, q, lo, hi)
+
+    def test_block_size_independence(self):
+        X = _columns(20_000, seed=1)
+        sketches = []
+        for bs in (37, 1000, 4096, 20_000):
+            sk = QuantileSketch(X.shape[1], k=128, seed=0)
+            for i in range(0, len(X), bs):
+                sk.update(X[i : i + bs])
+            sketches.append(sk.quantiles(self.QS))
+        for other in sketches[1:]:
+            np.testing.assert_array_equal(sketches[0], other)
+
+    def test_merge_matches_tolerance(self):
+        n = 30_000
+        X = _columns(n, seed=2)
+        parts = [
+            QuantileSketch(X.shape[1], k=256, seed=0).update(X[i : i + 10_000])
+            for i in range(0, n, 10_000)
+        ]
+        merged = parts[0]
+        for p in parts[1:]:
+            merged.merge(p)
+        assert merged.count == n
+        approx = merged.quantiles(self.QS)
+        for j in range(X.shape[1]):
+            col = np.sort(X[:, j])
+            for q, val in zip(self.QS, approx[j]):
+                lo, hi = _rank_of(col, val)
+                assert lo - 0.03 <= q <= hi + 0.03, (j, q, lo, hi)
+
+    def test_merge_geometry_mismatch_raises(self):
+        a = QuantileSketch(3, k=64)
+        with pytest.raises(ValueError, match="geometry"):
+            a.merge(QuantileSketch(4, k=64))
+        with pytest.raises(ValueError, match="geometry"):
+            a.merge(QuantileSketch(3, k=128))
+
+    def test_small_stream_is_exact(self):
+        # Fewer rows than k: nothing ever compacts, quantiles are exact
+        # order statistics of the f32 stream.
+        rng = np.random.default_rng(3)
+        X = rng.normal(size=(50, 2))
+        sk = QuantileSketch(2, k=64).update(X)
+        med = sk.quantiles([0.5])[:, 0]
+        want = np.sort(X.astype(np.float32), axis=0)[24]
+        np.testing.assert_array_equal(med, want)
+
+    def test_rejects_nonfinite_and_bad_shapes(self):
+        sk = QuantileSketch(2, k=8)
+        with pytest.raises(ValueError, match="non-finite"):
+            sk.update(np.array([[np.nan, 0.0]]))
+        with pytest.raises(ValueError, match="num_features"):
+            sk.update(np.zeros((4, 3)))
+        with pytest.raises(ValueError, match="even"):
+            QuantileSketch(2, k=7)
+        with pytest.raises(ValueError):
+            sk.quantiles([0.5])  # empty
+
+
+class TestQuantileBinner:
+    def test_fit_transform_equal_frequency(self):
+        n = 12_000
+        rng = np.random.default_rng(4)
+        X = rng.normal(size=(n, 3))
+        y = rng.integers(0, 4, size=n)
+        b = QuantileBinner(bins=8).fit(ArraySource(X, y), block_obs=1000)
+        assert b.fitted and b.edges_.shape == (3, 7)
+        assert b.num_classes_ == 4 and b.n_obs_ == n
+        codes = b.transform(X)
+        assert codes.dtype == np.int32
+        assert codes.min() >= 0 and codes.max() < 8
+        counts = np.apply_along_axis(np.bincount, 0, codes, minlength=8)
+        assert counts.min() > (n / 8) * 0.7  # roughly equal-frequency
+
+    def test_encode_column_matches_transform(self):
+        rng = np.random.default_rng(5)
+        X = rng.normal(size=(500, 4))
+        y = rng.integers(0, 2, size=500)
+        b = QuantileBinner(bins=16).fit(ArraySource(X, y))
+        full = b.transform(X)
+        for j in range(4):
+            np.testing.assert_array_equal(
+                b.encode_column(j, X[:, j]), full[:, j]
+            )
+
+    def test_unfitted_transform_raises(self):
+        with pytest.raises(RuntimeError, match="fit"):
+            QuantileBinner(bins=4).transform(np.zeros((2, 2)))
+        with pytest.raises(ValueError, match="bins"):
+            QuantileBinner(bins=1)
+
+    def test_continuous_target_raises(self):
+        rng = np.random.default_rng(6)
+        src = ArraySource(rng.normal(size=(100, 2)), rng.normal(size=100))
+        with pytest.raises(ValueError, match="target"):
+            QuantileBinner(bins=4).fit(src)
+
+    def test_float_integral_target_accepted(self):
+        rng = np.random.default_rng(7)
+        y = rng.integers(0, 3, size=200).astype(np.float64)  # CSV-style
+        b = QuantileBinner(bins=4).fit(ArraySource(rng.normal(size=(200, 2)), y))
+        assert b.num_classes_ == 3
+
+
+class TestBinnedSource:
+    def _src(self, n=2000, f=6, seed=8):
+        rng = np.random.default_rng(seed)
+        return ArraySource(
+            rng.normal(size=(n, f)), rng.integers(0, 3, size=n)
+        )
+
+    def test_blocks_match_binner_transform(self):
+        src = self._src()
+        bs = BinnedSource(src, 8)
+        Xc, yc = bs.materialize(256)
+        want = bs.binner.transform(src.materialize()[0])
+        np.testing.assert_array_equal(Xc, want)
+        np.testing.assert_array_equal(yc, src.materialize()[1])
+
+    def test_stats_discrete_no_scan(self):
+        bs = fit_binned(self._src(), 8)
+        st = bs.stats()
+        assert st.discrete and st.num_values == 8 and st.num_classes == 3
+
+    def test_fingerprint_derives_from_base_and_config(self):
+        src = self._src()
+        fp16 = BinnedSource(src, 16).fingerprint()
+        fp64 = BinnedSource(src, 64).fingerprint()
+        assert fp16 != fp64
+        assert fp16 != src.fingerprint()
+        # same config, fresh wrapper -> same identity (pre-fit, no I/O)
+        assert fp16 == BinnedSource(src, 16).fingerprint()
+        # sketch config is part of the identity too
+        assert fp16 != BinnedSource(src, 16, sketch_k=256).fingerprint()
+        assert fp16 != BinnedSource(src, 16, seed=1).fingerprint()
+
+    def test_binner_memoised_across_instances(self):
+        clear_binner_memo()
+        src = self._src(seed=9)
+        a = BinnedSource(src, 8)
+        first = a.binner
+        b = BinnedSource(src, 8)
+        assert b.binner is first  # memo hit, no second sketch pass
+        clear_binner_memo()
+
+    def test_guards(self):
+        src = self._src()
+        with pytest.raises(ValueError, match="already binned"):
+            BinnedSource(BinnedSource(src, 4), 4)
+        with pytest.raises(TypeError, match="DataSource"):
+            BinnedSource(np.zeros((2, 2)), 4)
+        with pytest.raises(ValueError, match="exactly one"):
+            BinnedSource(src)
+        with pytest.raises(ValueError, match="exactly one"):
+            BinnedSource(src, 4, binner=QuantileBinner(4))
+
+
+class TestSelectorBins:
+    def _data(self, n=2500, f=10, seed=10):
+        rng = np.random.default_rng(seed)
+        y = rng.integers(0, 2, size=n)
+        X = rng.normal(size=(n, f))
+        for j in range(3):
+            X[:, j] += y * (1.5 - 0.4 * j)
+        return X, y
+
+    def test_in_memory_binned_fit(self):
+        X, y = self._data()
+        fs = MRMRSelector(num_select=3, bins=16).fit(X, y)
+        assert fs.plan_.bins == 16
+        assert isinstance(fs.plan_.score, MIScore)
+        assert fs.plan_.score.num_values == 16
+        assert set(fs.selected_) == {0, 1, 2}
+
+    def test_streaming_matches_in_memory_every_block_size(self):
+        X, y = self._data(seed=11)
+        base = MRMRSelector(num_select=3, bins=16).fit(X, y)
+        src = ArraySource(X, y)
+        for bo in (128, 999, 4096):
+            fs = MRMRSelector(num_select=3, bins=16, block_obs=bo).fit(src)
+            assert fs.plan_.encoding == "streaming" and fs.plan_.bins == 16
+            np.testing.assert_array_equal(fs.selected_, base.selected_)
+
+    def test_prewrapped_source_agrees(self):
+        X, y = self._data(seed=12)
+        src = ArraySource(X, y)
+        a = MRMRSelector(num_select=3, bins=8).fit(src)
+        b = MRMRSelector(num_select=3).fit(BinnedSource(src, 8))
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        assert b.plan_.bins == 8
+
+    def test_float64_npy_source_end_to_end(self, tmp_path):
+        X, y = self._data(seed=13)
+        src = ArraySource(X.astype(np.float64), y)
+        xp, yp = src.to_npy(
+            str(tmp_path / "X.npy"), str(tmp_path / "y.npy")
+        )
+        from repro.data.sources import NpySource
+
+        fs = MRMRSelector(num_select=3, bins=16, block_obs=512).fit(
+            NpySource(xp, yp)
+        )
+        base = MRMRSelector(num_select=3, bins=16).fit(X, y)
+        np.testing.assert_array_equal(fs.selected_, base.selected_)
+
+    def test_continuous_mi_early_error_array(self):
+        X, y = self._data()
+        with pytest.raises(ValueError, match="bins="):
+            MRMRSelector(num_select=2, score=MIScore(2, 2)).fit(X, y)
+
+    def test_continuous_mi_early_error_source(self):
+        X, y = self._data()
+        with pytest.raises(ValueError, match="bins="):
+            MRMRSelector(num_select=2, score=MIScore(2, 2)).fit(
+                ArraySource(X, y)
+            )
+
+    def test_explicit_score_num_values_guard(self):
+        X, y = self._data()
+        with pytest.raises(ValueError, match="num_values"):
+            MRMRSelector(num_select=2, score=MIScore(4, 2), bins=16).fit(X, y)
+
+    def test_bins_ignored_for_discrete_and_pearson(self):
+        rng = np.random.default_rng(14)
+        Xd = rng.integers(0, 3, size=(400, 5))
+        yd = rng.integers(0, 2, size=400)
+        fd = MRMRSelector(num_select=2, bins=16).fit(Xd, yd)
+        assert fd.plan_.bins is None
+        Xc, yc = self._data()
+        fp = MRMRSelector(
+            num_select=2, bins=16, score=PearsonMIScore()
+        ).fit(Xc, yc)
+        assert fp.plan_.bins is None
+        assert isinstance(fp.plan_.score, PearsonMIScore)

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.kernels import ops, ref
+from repro.kernels.binning import bin_codes_pallas
 from repro.kernels.contingency import contingency_tables_pallas
 from repro.kernels.mi_score import mi_scores_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
@@ -123,6 +124,69 @@ class TestMIScoreKernel:
         counts = jnp.zeros((4, 3, 3), jnp.float32)
         got = mi_scores_pallas(counts, interpret=True)
         np.testing.assert_allclose(got, np.zeros(4), atol=1e-6)
+
+
+class TestBinCodesKernel:
+    @pytest.mark.parametrize(
+        "b,n,e",
+        [
+            (16, 4, 3),
+            (100, 7, 15),     # non-divisible B and N
+            (300, 130, 7),    # feature padding past one lane tile
+            (64, 1, 31),      # single feature
+            (1, 5, 1),        # single row, single edge
+        ],
+    )
+    def test_matches_oracle_bitwise(self, b, n, e):
+        rng = np.random.default_rng(hash((b, n, e)) % 2**31)
+        X = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+        edges = jnp.asarray(np.sort(rng.normal(size=(n, e)), axis=1), jnp.float32)
+        got = np.asarray(bin_codes_pallas(X, edges, interpret=True))
+        want = np.asarray(ref.bin_codes(X, edges))
+        assert got.dtype == np.int32
+        np.testing.assert_array_equal(got, want)
+
+    @pytest.mark.parametrize("tile_b,tile_n", [(8, 2), (64, 8), (512, 256)])
+    def test_tile_sweep(self, tile_b, tile_n):
+        rng = np.random.default_rng(11)
+        X = jnp.asarray(rng.normal(size=(130, 21)), jnp.float32)
+        edges = jnp.asarray(np.sort(rng.normal(size=(21, 9)), axis=1), jnp.float32)
+        got = bin_codes_pallas(
+            X, edges, tile_b=tile_b, tile_n=tile_n, interpret=True
+        )
+        np.testing.assert_array_equal(got, ref.bin_codes(X, edges))
+
+    def test_ties_go_to_upper_bin(self):
+        # side="right" semantics: a value exactly on an edge counts that
+        # edge, landing in the bin ABOVE it — both paths must agree.
+        edges = jnp.asarray([[0.0, 1.0, 2.0]], jnp.float32).T.reshape(1, 3)
+        X = jnp.asarray([[-1.0], [0.0], [0.5], [1.0], [2.0], [3.0]], jnp.float32)
+        got = np.asarray(bin_codes_pallas(X, edges, interpret=True))[:, 0]
+        np.testing.assert_array_equal(got, [0, 1, 1, 2, 3, 3])
+        np.testing.assert_array_equal(
+            got, np.asarray(ref.bin_codes(X, edges))[:, 0]
+        )
+
+    def test_duplicate_edges_skip_bins(self):
+        # Heavy-tie features fit duplicate edges; codes jump past the
+        # empty bins identically in kernel and oracle.
+        edges = jnp.asarray([[1.0, 1.0, 1.0, 5.0]], jnp.float32)
+        X = jnp.asarray([[0.0], [1.0], [4.0], [5.0]], jnp.float32)
+        got = np.asarray(bin_codes_pallas(X, edges, interpret=True))[:, 0]
+        np.testing.assert_array_equal(got, [0, 3, 3, 4])
+        np.testing.assert_array_equal(
+            got, np.asarray(ref.bin_codes(X, edges))[:, 0]
+        )
+
+    def test_ops_dispatch_agrees(self):
+        rng = np.random.default_rng(12)
+        X = jnp.asarray(rng.normal(size=(77, 13)), jnp.float32)
+        edges = jnp.asarray(np.sort(rng.normal(size=(13, 7)), axis=1), jnp.float32)
+        auto = np.asarray(ops.bin_codes(X, edges))
+        forced = np.asarray(ops.bin_codes(X, edges, use_pallas=True))
+        oracle = np.asarray(ref.bin_codes(X, edges))
+        np.testing.assert_array_equal(auto, oracle)
+        np.testing.assert_array_equal(forced, oracle)
 
 
 class TestOpsDispatch:

@@ -248,6 +248,69 @@ class TestServiceCache:
             j2 = svc.submit(source, num_select=2, score=score, block_obs=16)
             assert svc.poll(j2).cache_hit
 
+    def test_binned_bin_counts_distinct_cache_keys(self):
+        # Same file, different bin config -> different binned fingerprint
+        # -> different result-cache line.  Binned vs pre-discretised of
+        # the same base are distinct too.
+        from repro.data.binning import BinnedSource
+
+        rng = np.random.default_rng(31)
+        X = rng.normal(size=(128, 8))
+        y = rng.integers(0, 2, size=128)
+        base = ArraySource(X, y)
+        with SelectionService(workers=1) as svc:
+            j16 = svc.submit(base, num_select=2, bins=16, block_obs=64)
+            svc.result(j16, timeout=120)
+            j64 = svc.submit(base, num_select=2, bins=64, block_obs=64)
+            svc.result(j64, timeout=120)
+            assert not svc.poll(j64).cache_hit
+            # pre-discretised codes submitted as their own discrete source:
+            # distinct content, distinct fingerprint, distinct key
+            codes, labels = BinnedSource(base, 16).materialize()
+            jd = svc.submit(ArraySource(codes, labels), num_select=2,
+                            block_obs=64)
+            svc.result(jd, timeout=120)
+            st = svc.stats()["cache"]
+            assert st["hits"] == 0 and st["misses"] == 3, st
+
+    def test_binned_repeat_is_cache_hit_zero_io(self):
+        # A repeated identical binned fit never touches the source again:
+        # no sketch pass, no scoring passes — pure cache read.
+        from repro.data.binning import clear_binner_memo
+
+        clear_binner_memo()
+        rng = np.random.default_rng(32)
+        X = rng.normal(size=(96, 6))
+        y = rng.integers(0, 2, size=96).astype(np.int32)
+
+        class Probe(ArraySource):
+            passes = 0
+
+            def iter_blocks(self, block_obs):
+                Probe.passes += 1
+                return super().iter_blocks(block_obs)
+
+        source = Probe(X, y)
+        with SelectionService(workers=1) as svc:
+            j1 = svc.submit(source, num_select=2, bins=8, block_obs=48)
+            r1 = svc.result(j1, timeout=120)
+            after_first = Probe.passes
+            assert after_first >= 3  # stats + sketch + scoring passes
+            j2 = svc.submit(source, num_select=2, bins=8, block_obs=48)
+            r2 = svc.result(j2, timeout=10)
+            assert Probe.passes == after_first  # zero additional I/O
+            assert svc.poll(j2).cache_hit
+            _assert_results_equal(r1, r2)
+            # A FRESH instance of the same content pays exactly one pass —
+            # the in-memory fingerprint content hash.  Stats memo, binner
+            # memo and the result cache all key off it: no re-sketch, no
+            # re-fit.
+            j3 = svc.submit(Probe(X, y), num_select=2, bins=8, block_obs=48)
+            svc.result(j3, timeout=10)
+            assert Probe.passes == after_first + 1
+            assert svc.poll(j3).cache_hit
+        clear_binner_memo()
+
     def test_submit_source_ref_and_arrays(self):
         with SelectionService(workers=1, fit_fn=lambda req: _dummy_result()) as svc:
             j1 = svc.submit("corral:256x16:0", num_select=2)
