@@ -16,6 +16,15 @@ streaming, selections must agree) against the Pearson approximation —
 the only pre-binning continuous path — and times the one-off quantile
 sketch pass that cuts the bin edges.
 
+The **I/O-tax cells** (``--batch-candidates`` / ``--spill-dir`` /
+``--readahead``) measure the three pass-count/pass-cost knobs on the
+smallest tall block (the regime where per-pass cost dominates): batched
+redundancy (``+qN``), the encoded-block spill cache (``+spill``),
+cross-pass read-ahead (``+raN``) and all three combined.  Each cell must
+reproduce the plain streaming selections bitwise and records the
+engine's ``io`` ledger (passes / blocks / bytes, parse-vs-replay split)
+alongside the timing.
+
 ``--criterion mid,miq`` adds a greedy-objective axis: the FIRST criterion
 runs the full (block x prefetch) grid on both datasets; each further
 criterion runs one tall cell (largest block, last prefetch depth) plus
@@ -62,7 +71,7 @@ def _fit_record(
         dt = min(dt, time.time() - t0)
     # Both engines run L scoring passes (1 relevance + L-1/L redundancy);
     # rows/s is nominal pass throughput over the whole selection.
-    return dict(
+    rec = dict(
         mode=mode,
         rows=rows,
         cols=cols,
@@ -73,6 +82,11 @@ def _fit_record(
         repeats=repeats,
         selected=sel.selected_.tolist(),
     )
+    # Streamed fits carry the pass/bytes ledger: savings from batching /
+    # spilling / read-ahead are asserted from it, not eyeballed.
+    if sel.result_ is not None and sel.result_.io is not None:
+        rec["io"] = sel.result_.io
+    return rec
 
 
 def _bench_dataset(
@@ -130,6 +144,61 @@ def _bench_dataset(
             records.append(rec)
     for r in records:
         r["criterion"] = criterion
+    return records
+
+
+def _bench_io_tax(
+    tag: str, rows: int, cols: int, select: int, bo: int, base: list,
+    qs, spill_root: str, readahead: int, tmp: str, repeats: int,
+) -> list:
+    """The L-pass I/O-tax cells on one dataset: batched redundancy,
+    encoded-block spill, cross-pass read-ahead, and all three combined.
+    Every cell must reproduce the plain streaming selections bitwise."""
+    score = MIScore(num_values=2, num_classes=2)
+    state_bytes = cols * 2 * 2 * 4
+    x_path = os.path.join(tmp, f"{tag}X.npy")
+    y_path = os.path.join(tmp, f"{tag}y.npy")
+    prefix = "" if tag == "tall" else f"{tag}_"
+    dtype_bytes = np.load(x_path, mmap_mode="r").dtype.itemsize
+
+    def cell(mode: str, state_mult: int = 1, **knobs) -> dict:
+        rec = _fit_record(
+            f"{prefix}{mode}", rows, cols, select,
+            lambda: MRMRSelector(
+                num_select=select, score=score, block_obs=bo, **knobs
+            ).fit(NpySource(x_path, y_path)),
+            bo * cols * dtype_bytes + state_bytes * state_mult, repeats,
+        )
+        rec["block_obs"] = bo
+        rec.update(knobs)
+        if rec["selected"] != base:
+            raise SystemExit(
+                f"{rec['mode']} diverged: {rec['selected']} != {base}"
+            )
+        return rec
+
+    records = []
+    for q in qs:
+        # Warm the batched (vmapped) accumulate for this (block, q) shape
+        # so the cell times passes, not the one-off XLA compile.
+        MRMRSelector(num_select=2, score=score, block_obs=bo,
+                     batch_candidates=q).fit(NpySource(x_path, y_path))
+        records.append(cell(f"streaming@{bo}+q{q}", state_mult=q,
+                            batch_candidates=q))
+    # Spill cells share one directory so repeats 2..R (and the combined
+    # cell) time the replay path; min-over-repeats records the warm state,
+    # the io ledger of the last run shows parse vs replay traffic.
+    spill = os.path.join(spill_root, tag)
+    records.append(cell(f"streaming@{bo}+spill", spill_dir=spill))
+    records.append(cell(f"streaming@{bo}+ra{readahead}",
+                        readahead=readahead))
+    q = max(qs)
+    records.append(cell(
+        f"streaming@{bo}+q{q}+spill+ra{readahead}", state_mult=q,
+        batch_candidates=q, spill_dir=spill, readahead=readahead,
+    ))
+    for r in records:
+        r["criterion"] = "mid"
     return records
 
 
@@ -232,6 +301,15 @@ def main(argv=None) -> list:
                     help="comma-separated streaming block sizes (continuous)")
     ap.add_argument("--bins", type=int, default=16,
                     help="equal-frequency bins for the continuous case")
+    ap.add_argument("--batch-candidates", default="4,8",
+                    help="comma-separated q values for the batched-"
+                         "redundancy cells (empty string skips them)")
+    ap.add_argument("--spill-dir", default="",
+                    help="encoded-block spill directory for the spill "
+                         "cells (default: a per-run temp dir)")
+    ap.add_argument("--readahead", type=int, default=2,
+                    help="cross-pass read-ahead depth for the read-ahead "
+                         "and combined cells")
     ap.add_argument("--criterion", default="mid,miq",
                     help="comma-separated greedy objectives; the first runs "
                          "the full grid, the rest one tall cell each "
@@ -263,17 +341,40 @@ def main(argv=None) -> list:
                 [max(tall_blocks)], prefetches[-1:], args.seed, tmp,
                 args.repeats, criterion=crit,
             )
+        qs = [int(q) for q in args.batch_candidates.split(",") if q]
+        if qs:
+            # I/O-tax cells ride the smallest tall block — the regime
+            # where per-pass cost dominates and the PR 7 baseline showed
+            # the 3x falloff the knobs attack.
+            tall_base = next(
+                r for r in records if r["mode"].startswith("streaming@")
+            )["selected"]
+            records += _bench_io_tax(
+                "tall", args.rows, args.cols, args.select,
+                min(tall_blocks), tall_base, qs,
+                args.spill_dir or os.path.join(tmp, "spill"),
+                args.readahead, tmp, args.repeats,
+            )
         if args.wide_rows > 0:
             if args.wide_rows > args.wide_cols * 0.25:
                 raise SystemExit(
                     f"--wide-rows {args.wide_rows} / --wide-cols "
                     f"{args.wide_cols} is not wide (m/n must be <= 0.25)"
                 )
-            records += _bench_dataset(
+            wide_blocks = [int(b) for b in args.wide_block_obs.split(",")]
+            wide_records = _bench_dataset(
                 "wide", args.wide_rows, args.wide_cols, args.select,
-                [int(b) for b in args.wide_block_obs.split(",")], prefetches,
+                wide_blocks, prefetches,
                 args.seed + 1, tmp, args.repeats, criterion=criteria[0],
             )
+            records += wide_records
+            if qs:
+                records += _bench_io_tax(
+                    "wide", args.wide_rows, args.wide_cols, args.select,
+                    min(wide_blocks), wide_records[0]["selected"], qs,
+                    args.spill_dir or os.path.join(tmp, "spill"),
+                    args.readahead, tmp, args.repeats,
+                )
         if args.cont_rows > 0:
             records += _bench_continuous(
                 args.cont_rows, args.cont_cols, args.select, args.bins,
@@ -283,7 +384,7 @@ def main(argv=None) -> list:
 
     for r in records:
         print(
-            f"{r['mode']:<24s} {r['seconds']:8.2f}s "
+            f"{r['mode']:<30s} {r['seconds']:8.2f}s "
             f"{r['rows_per_s']:>12,d} rows/s "
             f"peak_input={r['peak_input_bytes'] / 1e6:8.1f} MB"
         )

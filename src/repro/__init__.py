@@ -50,9 +50,46 @@ source shards blocks over observations, a **wide** source (``m/n <=
 0.25``, the bioinformatics case) shards blocks *and the per-pair
 statistics state* over features — bounding per-device statistics memory
 by ``N/shards`` pairs — and a both-large source runs a 2-D grid.
-``prefetch`` (default 2) double-buffers placement: a host thread reads
-and pads the next block while the device accumulates the current one
-(``prefetch=0`` restores the synchronous placer).
+``prefetch`` (default ``"auto"``: off on CPU, 2 elsewhere) double-buffers
+placement: a host thread reads and pads the next block while the device
+accumulates the current one (``prefetch=0`` restores the synchronous
+placer).
+
+The I/O tax
+-----------
+
+A streamed fit reads the source ``L`` times — 1 relevance pass plus
+``num_select - 1`` redundancy passes — and at production scale that pass
+count, not FLOPs, is the wall-clock story.  Three composable knobs attack
+it; under every combination selections stay **bitwise-identical** to the
+plain engine (a tested invariant, so the service's result cache treats
+all execution geometries of one fit as the same content)::
+
+    sel = MRMRSelector(
+        num_select=32,
+        batch_candidates=8,        # ~ceil(31/8) redundancy passes, not 31
+        spill_dir="/tmp/spill",    # parse/encode paid once, then replay
+        readahead=2,               # pass l+1 reads overlap pass l's tail
+    ).fit(source)
+    sel.result_.io                 # {'passes': 5, 'blocks_read': ...,
+                                   #  'bytes_read': ..., 'cache': {...}}
+
+``batch_candidates=q`` makes each redundancy pass score the needed column
+plus the top ``q-1`` current candidates in one sweep (the statistics
+state grows a ``q``-sized leading axis, sharded like the rest), then
+commits picks with exact criterion folds — a speculated redundancy vector
+is a pairwise property of the data, never invalidated by later picks.
+``spill_dir=`` wraps the source in :class:`~repro.data.block_cache.
+BlockCacheSource`: pass 1 spills each parsed/encoded block as compact
+``.npy`` chunks (atomic rename, manifest-last, corruption-checked on
+replay, LRU byte budget), passes 2..L replay them memmapped — a binned
+source spills its *int codes*, so quantile-encode is also paid once.
+``readahead=`` starts reading the next pass's blocks before the current
+pass drains (block reads never depend on the just-picked column).  Every
+streamed ``MRMRResult`` carries the measured ``io`` ledger, so the pass
+math is asserted by tests and benchmarks, not eyeballed.  (CLI: ``python
+-m repro.launch.select --batch-candidates 8 --spill-dir /tmp/spill
+--readahead 2``.)
 
 Custom scores (paper §IV.D) run through the same front door::
 

@@ -74,6 +74,11 @@ class MRMRResult:
     predating the richer report).  ``criterion`` and ``engine`` name what
     produced the result (empty when the producer did not say — the
     selector backfills both from the plan).
+
+    ``io`` is the fit's I/O ledger — engines that stream a source report
+    ``passes`` / ``blocks_read`` / ``bytes_read`` (plus a ``cache``
+    sub-dict splitting parse-vs-replay traffic when a spill cache was
+    on); in-memory engines leave it ``None``.
     """
 
     selected: Array
@@ -81,6 +86,7 @@ class MRMRResult:
     relevance: Array | None = None
     criterion: str = ""
     engine: str = ""
+    io: dict | None = None
 
     @property
     def objective_trajectory(self) -> Array:
@@ -115,6 +121,7 @@ class MRMRResult:
                 relevance=enc(self.relevance),
                 criterion=self.criterion,
                 engine=self.engine,
+                io=self.io,
             )
         )
 
@@ -136,6 +143,7 @@ class MRMRResult:
             relevance=dec(d.get("relevance"), jnp.float32),
             criterion=d.get("criterion", ""),
             engine=d.get("engine", ""),
+            io=d.get("io"),
         )
 
 

@@ -43,7 +43,7 @@ from repro.data.binning import BinnedSource
 from repro.data.sources import ArraySource, DataSource
 from repro.dist.meshes import factor_mesh, make_mesh
 from repro.dist.sharding import axes_tuple as _axes_tuple, mesh_extent
-from repro.dist.streaming import effective_block_obs
+from repro.dist.streaming import effective_block_obs, resolve_prefetch
 
 Array = jax.Array
 
@@ -93,11 +93,20 @@ class SelectionPlan:
     block_obs: int = 65536            # streaming: EFFECTIVE observations per
                                       # block (rounded up to the obs extent)
     prefetch: int = 2                 # streaming: blocks placed ahead of
-                                      # device accumulation (0 = synchronous)
+                                      # device accumulation (0 = synchronous;
+                                      # the selector resolves "auto" to an
+                                      # int before the plan is recorded)
     criterion: object = "mid"         # greedy objective (name or Criterion);
                                       # appended last for positional compat
     bins: int | None = None           # quantile-binned fit: codes per
                                       # feature (None = data was discrete)
+    batch_candidates: int = 1         # streaming: redundancy vectors
+                                      # speculated per pass (q; 1 = classic)
+    spill_dir: str | None = None      # streaming: encoded-block spill cache
+                                      # directory (None = off)
+    spill_budget_bytes: int | None = None  # LRU byte budget for spill_dir
+    readahead: int = 0                # streaming: raw blocks read across
+                                      # pass boundaries (0 = off)
 
     @property
     def mesh_axes(self) -> tuple:
@@ -508,7 +517,25 @@ class MRMRSelector:
         to the observation-axes extent.
       prefetch: streaming fits only — host blocks read, padded and placed
         ahead of device accumulation on a background thread (double
-        buffering); 0 restores the synchronous placer.
+        buffering); 0 restores the synchronous placer and the ``"auto"``
+        default resolves per backend (off on CPU, where the staging
+        thread measurably loses to async dispatch; 2 elsewhere — see
+        :func:`repro.dist.streaming.resolve_prefetch`).
+      batch_candidates: streaming fits only — redundancy vectors
+        speculated per pass (``q``).  Each redundancy pass scores the
+        needed column plus the top ``q-1`` remaining candidates in one
+        sweep, cutting ``num_select=L`` from ``L-1`` redundancy passes
+        toward ``⌈(L-1)/q⌉`` at ``q×`` the statistics memory.
+        Selections are bitwise-identical to the default ``q=1``.
+      spill_dir: streaming fits only — directory for the encoded-block
+        spill cache (:class:`repro.data.block_cache.BlockCacheSource`).
+        Pass 1 spills each parsed/encoded block as compact ``.npy``
+        chunks; passes 2..L replay them memmapped, so CSV parse and bin
+        encode are paid once per dataset instead of once per pass.
+      readahead: streaming fits only — raw blocks the cross-pass reader
+        streams ahead of the consumer, across pass boundaries, hiding
+        each pass's cold-start I/O bubble (0 = off; supersedes
+        ``prefetch`` when positive).
       bins: discretise continuous features on the fly into this many
         equal-frequency bins (one streaming quantile-sketch pass; see
         :mod:`repro.data.binning`), so float data runs the exact discrete
@@ -535,11 +562,15 @@ class MRMRSelector:
     incremental: bool = True
     block: int = 64
     block_obs: int = 65536
-    prefetch: int = 2
+    prefetch: int | str = "auto"
     # appended after the pre-1.2 fields so positional construction keeps
     # its old meaning
     criterion: Criterion | str = "mid"
     bins: int | None = None
+    batch_candidates: int = 1
+    spill_dir: str | None = None
+    spill_budget_bytes: int | None = None
+    readahead: int = 0
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
@@ -739,13 +770,25 @@ class MRMRSelector:
         block_obs = effective_block_obs(
             self.block_obs, math.prod(shape[: len(obs)]) if obs else 1
         )
+        q = int(self.batch_candidates)
+        if q < 1:
+            raise ValueError(f"batch_candidates must be >= 1, got {q}")
+        if int(self.readahead) < 0:
+            raise ValueError(
+                f"readahead must be >= 0, got {self.readahead}"
+            )
         # Streaming always uses the running criterion fold: the recompute
         # baseline would multiply the number of passes over the data by L.
+        # prefetch resolves here ("auto" -> backend heuristic) so plan_
+        # records the int that actually ran, like effective block_obs.
         return SelectionPlan(
             encoding="streaming", obs_axes=obs, feat_axes=feat,
             mesh_shape=shape, block=self.block, block_obs=block_obs,
-            incremental=True, prefetch=self.prefetch, score=score,
-            criterion=resolve_criterion(self.criterion),
+            incremental=True, prefetch=resolve_prefetch(self.prefetch),
+            score=score, criterion=resolve_criterion(self.criterion),
+            batch_candidates=q, spill_dir=self.spill_dir,
+            spill_budget_bytes=self.spill_budget_bytes,
+            readahead=int(self.readahead),
         )
 
     def _finish_fit(

@@ -23,6 +23,38 @@ independent of ``num_obs``.  The greedy objective is pluggable
 declares ``needs_redundancy = False`` (``maxrel``) collapses the whole
 fit to ONE relevance pass of I/O.
 
+At production scale that ``L``-pass tax is the wall-clock story, so the
+engine carries three composable knobs that attack pass count and
+per-pass cost — selections stay bitwise-identical to the plain engine
+under every combination:
+
+* ``batch_candidates=q`` — **batched redundancy.**  When a redundancy
+  pass is unavoidable, score the pass's target column *and* the top
+  ``q-1`` remaining candidates by the current objective in the same
+  sweep (the statistics state grows a ``q``-sized leading axis; targets
+  ride as ``(q, B)`` slabs).  The greedy loop then commits picks with
+  exact per-pick :class:`~repro.core.criteria.Criterion` folds, drawing
+  each needed redundancy vector from the batch when speculation hit and
+  paying a fresh pass only on a miss — redundancy vectors are pairwise
+  properties of the data, so a speculated vector is never invalidated by
+  later picks and stays usable for the rest of the fit.  ``num_select=L``
+  drops from ``L-1`` redundancy passes toward ``⌈(L-1)/q⌉``.
+* ``spill_dir=`` — **encoded-block spill cache** (:class:`repro.data.
+  block_cache.BlockCacheSource`).  Pass 1 writes each block — post CSV
+  parse, post quantile-bin encode — to compact ``.npy`` chunks; passes
+  2..L replay memmapped chunks, so parse/encode cost is paid once per
+  dataset instead of once per pass.  A binned source spills its *int
+  codes* (the device-side fused encode is skipped in favour of encoding
+  exactly once on the host).
+* ``readahead=`` — **cross-pass read-ahead** (:class:`~repro.dist.
+  streaming.CrossPassReader`).  Block reads never depend on the
+  just-picked column (only the pass-target extraction does, a host
+  slice at consume time), so a reader thread streams the head of pass
+  ``l+1`` while the device drains the tail of pass ``l``, removing the
+  per-pass cold-start bubble.  ``readahead > 0`` supersedes the in-pass
+  ``prefetch`` thread: the reader is the producer and staging runs at
+  consume time.
+
 Both of the paper's §III regimes stream:
 
 * **tall** — blocks shard over ``obs_axes`` (the paper's conventional
@@ -30,14 +62,23 @@ Both of the paper's §III regimes stream:
 * **wide** — blocks *and the statistics state* shard over ``feat_axes``
   (the alternative/vertical partitioning), so the ``O(N · d_v · d_c)``
   per-pair state that would blow one device spreads across the mesh:
-  per-device statistics memory is ``O(N/shards · d_v · d_c)``.
+  per-device statistics memory is ``O(N/shards · d_v · d_c)`` (times
+  ``q`` under batching).
 * **both-large** — a 2-D (obs × feat) grid combines the two; XLA
   partitions the accumulate across the grid from the input/state
   shardings alone.
 
 ``prefetch`` double-buffers placement (:class:`~repro.dist.streaming.
 PrefetchPlacer`): the host reads/pads/``device_put``s block ``i+1`` while
-the device accumulates block ``i``; ``0`` restores the synchronous path.
+the device accumulates block ``i``; ``0`` restores the synchronous path
+and ``"auto"`` applies :func:`~repro.dist.streaming.resolve_prefetch`
+(off on CPU, where the staging thread measurably loses to async sync
+dispatch; on elsewhere).
+
+Every fit reports its I/O on the result: ``MRMRResult.io`` carries
+``passes`` / ``blocks_read`` / ``bytes_read`` counters (plus the spill
+cache's parse-vs-replay split when ``spill_dir`` is set), so the pass
+math above is asserted by tests and benchmarks, not eyeballed.
 """
 
 from __future__ import annotations
@@ -54,15 +95,21 @@ from repro.core.mrmr import MRMRResult, WarmJitCache
 from repro.core.scores import MIScore, ScoreFn
 from repro.core.selector import check_num_select, register_engine
 from repro.data.binning import BinnedSource, _as_class_labels
+from repro.data.block_cache import BlockCacheSource
 from repro.data.sources import DataSource, as_source
-from repro.dist.streaming import BlockPlacer, PrefetchPlacer
+from repro.dist.streaming import (
+    BlockPlacer,
+    CrossPassReader,
+    PrefetchPlacer,
+    resolve_prefetch,
+)
 
 _NEG_INF = float("-inf")
 
 # Warm accumulate cache: one jitted accumulate per (score × mesh layout ×
-# block shape).  A fresh ``jax.jit(score.accumulate)`` every fit would
-# recompile the whole per-block step each time; keeping the wrapper keyed
-# by the placed geometry means repeat streamed fits (the selection
+# block shape × candidate-batch width).  A fresh ``jax.jit`` every fit
+# would recompile the whole per-block step each time; keeping the wrapper
+# keyed by the placed geometry means repeat streamed fits (the selection
 # service's steady state) pay zero compile after the first.
 _ACC_FN_CACHE = WarmJitCache(capacity=32)
 
@@ -72,21 +119,43 @@ def _cached_acc_fn(
     placer: BlockPlacer,
     mesh: Mesh | None,
     num_edges: int | None = None,
+    batch: int | None = None,
 ):
+    """The jitted per-block accumulate.
+
+    ``batch=None`` is the classic single-target step.  ``batch=q`` vmaps
+    the *same* accumulate over a leading candidate axis — state leaves
+    ``(q, N, ...)``, targets ``(q, B)``, the block shared — so each slice
+    runs the identical per-target arithmetic as the unbatched step
+    (contingency counts are exact integers; selections stay bitwise).
+    """
     key = (
         "acc_fn", score, mesh, placer.block_obs, placer.padded_features,
-        placer.obs_axes, placer.feat_axes, num_edges,
+        placer.obs_axes, placer.feat_axes, num_edges, batch,
     )
 
     def build():
         # Pin the state layout (feature-sharded in the wide regime) through
         # the compiled accumulate, so XLA never gathers the per-pair
         # statistics.
-        shardings = placer.state_shardings(
-            score.init_state(placer.padded_features, "class")
+        state0 = score.init_state(
+            placer.padded_features, "class" if batch is None else "feature"
+        )
+        if batch is not None:
+            state0 = jax.tree.map(
+                lambda leaf: jnp.zeros(
+                    (batch,) + jnp.asarray(leaf).shape, jnp.asarray(leaf).dtype
+                ),
+                state0,
+            )
+        shardings = placer.state_shardings(state0)
+        step = (
+            score.accumulate
+            if batch is None
+            else jax.vmap(score.accumulate, in_axes=(0, None, 0, None))
         )
         if num_edges is None:
-            return jax.jit(score.accumulate, out_shardings=shardings)
+            return jax.jit(step, out_shardings=shardings)
 
         from repro.kernels import ops  # lazy: avoids core<->kernels cycle
 
@@ -99,7 +168,7 @@ def _cached_acc_fn(
         # per geometry, not per fitted-edge content.
         def fused(state, X_block, target, valid, edges):
             codes = ops.bin_codes(X_block, edges, use_pallas=use_pallas)
-            return score.accumulate(state, codes, target, valid)
+            return step(state, codes, target, valid)
 
         return jax.jit(fused, out_shardings=shardings)
 
@@ -132,60 +201,102 @@ def clear_acc_fn_cache() -> None:
     _ACC_FN_CACHE.clear()
 
 
-def _placed_blocks(
-    source: DataSource,
-    placer: BlockPlacer,
-    target_col: int | None,
-    prefetch: int,
-    binned: "BinnedSource | None" = None,
+def _extract_target(
+    X_blk: np.ndarray,
+    y_blk: np.ndarray,
+    target_cols,
+    binner,
 ):
-    """Iterate the source's blocks as placed (X, target, valid) tuples,
-    extracting the pass's target column on the host; ``prefetch > 0`` runs
-    read+pad+place up to that many blocks ahead on a host thread.
+    """The pass target from one raw host block: the class (``None``), one
+    feature column (int -> ``(B,)``) or a batch of candidate columns
+    (sequence -> ``(q, B)``).  With a ``binner`` the block is raw float32
+    and each target column encodes through the same f32 ``searchsorted``
+    the device kernel runs, so host and device codes agree bitwise."""
+    if binner is not None:
+        if target_cols is None:
+            return _as_class_labels(y_blk)
+        if np.ndim(target_cols) == 0:
+            c = int(target_cols)
+            return binner.encode_column(c, X_blk[:, c])
+        return np.stack(
+            [binner.encode_column(int(c), X_blk[:, int(c)]) for c in target_cols]
+        )
+    if target_cols is None:
+        return y_blk
+    if np.ndim(target_cols) == 0:
+        return X_blk[:, int(target_cols)]
+    return np.ascontiguousarray(X_blk[:, list(map(int, target_cols))].T)
 
-    With ``binned`` set the *base* source streams raw float32 blocks (the
-    device encodes them — the fused accumulate) and only the pass target
-    is encoded on the host: one column per redundancy pass, through the
-    same f32 ``searchsorted`` the kernel runs, so host and device codes
-    agree bitwise."""
 
-    def host_blocks():
-        if binned is not None:
-            binner = binned.binner
-            for X_blk, y_blk in binned.base.iter_blocks(placer.block_obs):
-                X32 = np.asarray(X_blk, np.float32)
-                if target_col is None:
-                    tgt = _as_class_labels(y_blk)
-                else:
-                    tgt = binner.encode_column(target_col, X32[:, target_col])
-                yield X32, tgt
-            return
-        for X_blk, y_blk in source.iter_blocks(placer.block_obs):
-            tgt = y_blk if target_col is None else X_blk[:, target_col]
-            yield X_blk, tgt
+class _PassIO:
+    """Per-fit I/O ledger: every pass/block/byte the engine consumes."""
 
-    if prefetch > 0:
-        return PrefetchPlacer(placer, depth=prefetch).stream(host_blocks())
-    return (placer(X_blk, tgt) for X_blk, tgt in host_blocks())
+    def __init__(self):
+        self.passes = 0
+        self.blocks_read = 0
+        self.bytes_read = 0
+
+    def count(self, raw_blocks):
+        for X_blk, y_blk in raw_blocks:
+            self.blocks_read += 1
+            self.bytes_read += X_blk.nbytes + y_blk.nbytes
+            yield X_blk, y_blk
+
+    def as_dict(self) -> dict:
+        return dict(
+            passes=self.passes,
+            blocks_read=self.blocks_read,
+            bytes_read=self.bytes_read,
+        )
 
 
 def _score_pass(
+    raw_pass,
     source: DataSource,
     score: ScoreFn,
     acc_fn,
     placer: BlockPlacer,
-    target_col: int | None,
+    target_cols,
     prefetch: int,
+    io: _PassIO,
     binned: "BinnedSource | None" = None,
-) -> np.ndarray:
-    """One full map-reduce pass: (N,) scores of every feature against the
-    class (``target_col=None``) or against feature column ``target_col``."""
-    kind = "class" if target_col is None else "feature"
-    state = placer.place_state(score.init_state(placer.padded_features, kind))
-    for placed in _placed_blocks(source, placer, target_col, prefetch, binned):
-        state = acc_fn(state, *placed)
-    scores = np.asarray(score.finalize(state), np.float32)
-    return scores[: source.num_features]  # drop feature-padding columns
+    batch: int | None = None,
+):
+    """One full map-reduce pass over ``raw_pass`` (an ``(X, y)`` raw host
+    block iterator): ``(N,)`` scores of every feature against the class
+    (``target_cols=None``) / one column (int), or ``(q, N)`` scores
+    against a batch of candidate columns (sequence of length ``q``)."""
+    io.passes += 1
+    binner = binned.binner if binned is not None else None
+    kind = "class" if target_cols is None else "feature"
+    if batch is None:
+        state = score.init_state(placer.padded_features, kind)
+    else:
+        state = jax.tree.map(
+            lambda leaf: jnp.zeros(
+                (batch,) + jnp.asarray(leaf).shape, jnp.asarray(leaf).dtype
+            ),
+            score.init_state(placer.padded_features, kind),
+        )
+    state = placer.place_state(state)
+
+    def host_blocks():
+        for X_blk, y_blk in io.count(raw_pass):
+            if binner is not None:
+                X_blk = np.asarray(X_blk, np.float32)
+            yield X_blk, _extract_target(X_blk, y_blk, target_cols, binner)
+
+    if prefetch > 0:
+        placed = PrefetchPlacer(placer, depth=prefetch).stream(host_blocks())
+    else:
+        placed = (placer(X_blk, tgt) for X_blk, tgt in host_blocks())
+    for triple in placed:
+        state = acc_fn(state, *triple)
+    if batch is None:
+        scores = np.asarray(score.finalize(state), np.float32)
+        return scores[: source.num_features]  # drop feature-padding columns
+    scores = np.asarray(jax.vmap(score.finalize)(state), np.float32)
+    return scores[:, : source.num_features]
 
 
 def mrmr_streaming(
@@ -197,8 +308,12 @@ def mrmr_streaming(
     mesh: Mesh | None = None,
     obs_axes=("data",),
     feat_axes=(),
-    prefetch: int = 2,
+    prefetch="auto",
     criterion: Criterion | str = "mid",
+    batch_candidates: int = 1,
+    spill_dir: str | None = None,
+    spill_budget_bytes: int | None = None,
+    readahead: int = 0,
 ) -> MRMRResult:
     """Greedy mRMR over a :class:`~repro.data.sources.DataSource`.
 
@@ -214,11 +329,23 @@ def mrmr_streaming(
         observation sharding reduces statistics with one all-reduce per
         block, the paper's reducer on the ICI ring.
       prefetch: host blocks to read/pad/place ahead of device
-        accumulation (0 = synchronous placement).
+        accumulation (0 = synchronous placement; ``"auto"`` resolves per
+        backend, see :func:`~repro.dist.streaming.resolve_prefetch`).
       criterion: greedy objective — a name (``"mid"``/``"miq"``/
         ``"maxrel"``) or :class:`~repro.core.criteria.Criterion`.  The
         fold runs on the same (N,)-sized vectors the in-memory engines
         fold, so selections agree engine-for-engine per criterion.
+      batch_candidates: redundancy vectors speculated per pass (``q``).
+        1 reproduces the classic one-pass-per-pick loop; ``q > 1`` cuts
+        redundancy passes toward ``⌈(L-1)/q⌉`` at ``q×`` the statistics
+        memory and identical selections.
+      spill_dir: directory for the encoded-block spill cache — pass 1
+        writes parsed/encoded blocks, passes 2..L replay them memmapped
+        (zero parse, zero re-encode).  ``spill_budget_bytes`` bounds the
+        directory LRU-wise.
+      readahead: raw blocks the cross-pass reader streams ahead of the
+        consumer, across pass boundaries (0 = off).  Supersedes
+        ``prefetch`` when positive.
     """
     crit = resolve_criterion(criterion)
     source = as_source(*source) if isinstance(source, tuple) else as_source(source)
@@ -230,8 +357,27 @@ def mrmr_streaming(
         )
     n = source.num_features
     check_num_select(num_select, n)
-    if prefetch < 0:
-        raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+    prefetch = resolve_prefetch(prefetch)
+    q = int(batch_candidates)
+    if q < 1:
+        raise ValueError(f"batch_candidates must be >= 1, got {q}")
+    if readahead < 0:
+        raise ValueError(f"readahead must be >= 0, got {readahead}")
+
+    # A caller-wrapped BlockCacheSource reports its counters on the result
+    # the same as an engine-built one.
+    spill: BlockCacheSource | None = (
+        source if isinstance(source, BlockCacheSource) else None
+    )
+    if spill_dir is not None:
+        # The cache sits post parse/encode: wrapping a BinnedSource spills
+        # its int codes, so replay passes skip the bin encode too (the
+        # device-side fused encode is deliberately bypassed — encoding
+        # happens exactly once, on the staging pass).
+        spill = BlockCacheSource(
+            source, spill_dir, budget_bytes=spill_budget_bytes
+        )
+        source = spill
 
     placer = BlockPlacer(block_obs, mesh, obs_axes, feat_axes, num_features=n)
 
@@ -246,43 +392,119 @@ def mrmr_streaming(
         if isinstance(source, BinnedSource) and isinstance(score, MIScore)
         else None
     )
+    num_edges = None
     if binned is not None:
         edges = binned.binner.edges_
-        base_fn = _cached_acc_fn(score, placer, mesh, num_edges=edges.shape[1])
+        num_edges = edges.shape[1]
         edges_dev = _placed_edges(edges, placer)
 
-        def acc_fn(state, X_block, target, valid):
-            return base_fn(state, X_block, target, valid, edges_dev)
+        def _wrap(base_fn):
+            return lambda state, X_block, target, valid: base_fn(
+                state, X_block, target, valid, edges_dev
+            )
 
+        acc_fn = _wrap(_cached_acc_fn(score, placer, mesh, num_edges=num_edges))
+        acc_fn_q = (
+            _wrap(
+                _cached_acc_fn(
+                    score, placer, mesh, num_edges=num_edges, batch=q
+                )
+            )
+            if q > 1
+            else None
+        )
     else:
         acc_fn = _cached_acc_fn(score, placer, mesh)
+        acc_fn_q = _cached_acc_fn(score, placer, mesh, batch=q) if q > 1 else None
 
-    rel = _score_pass(source, score, acc_fn, placer, None, prefetch, binned)
-    rel_j = jnp.asarray(rel)
-    cstate = crit.init_state(n)
-    mask = np.zeros((n,), bool)
-    selected = np.full((num_select,), -1, np.int32)
-    gains = np.zeros((num_select,), np.float32)
-    for l in range(num_select):
-        # The criterion fold is the same pure-f32 jnp math the device
-        # drivers trace, so argmax ties resolve identically to the
-        # in-memory engines (toward the lowest id).
-        g = np.array(crit.objective(rel_j, cstate, l), np.float32)
-        g[mask] = _NEG_INF
-        k = int(np.argmax(g))
-        selected[l], gains[l] = k, g[k]
-        mask[k] = True
-        if l + 1 < num_select and crit.needs_redundancy:
-            # One redundancy pass of I/O vs the just-picked column; maxrel
-            # (needs_redundancy=False) never re-reads the source.
-            red = _score_pass(source, score, acc_fn, placer, k, prefetch, binned)
+    # Raw block production: the fused binned path streams the *base*
+    # source's float blocks (the device encodes them); everything else —
+    # including a spill-cached binned source, whose cache already holds
+    # the codes — streams the source itself.
+    block_src = binned.base if binned is not None else source
+    io = _PassIO()
+    reader: CrossPassReader | None = None
+    if readahead > 0:
+        # Upper bound on passes; batching/speculation only lowers it, and
+        # close() stops the reader thread wherever the fit actually ends.
+        max_passes = num_select if crit.needs_redundancy else 1
+        reader = CrossPassReader(
+            lambda: block_src.iter_blocks(placer.block_obs),
+            depth=readahead,
+            max_passes=max_passes,
+        )
+        next_raw = reader.next_pass
+        prefetch = 0  # the reader thread is the producer; stage at consume
+    else:
+        next_raw = lambda: block_src.iter_blocks(placer.block_obs)
+
+    def run_pass(target_cols, batch=None):
+        return _score_pass(
+            next_raw(), source, score, acc_fn if batch is None else acc_fn_q,
+            placer, target_cols, prefetch, io, binned, batch,
+        )
+
+    try:
+        rel = run_pass(None)
+        rel_j = jnp.asarray(rel)
+        cstate = crit.init_state(n)
+        mask = np.zeros((n,), bool)
+        selected = np.full((num_select,), -1, np.int32)
+        gains = np.zeros((num_select,), np.float32)
+        # Speculated redundancy vectors by feature id: a vector is a pure
+        # pairwise property of the data, so once computed it stays valid
+        # for the whole fit (an in-batch pick never invalidates it).
+        pending: dict = {}
+        for l in range(num_select):
+            # The criterion fold is the same pure-f32 jnp math the device
+            # drivers trace, so argmax ties resolve identically to the
+            # in-memory engines (toward the lowest id).
+            g = np.array(crit.objective(rel_j, cstate, l), np.float32)
+            g[mask] = _NEG_INF
+            k = int(np.argmax(g))
+            selected[l], gains[l] = k, g[k]
+            mask[k] = True
+            if l + 1 >= num_select or not crit.needs_redundancy:
+                continue
+            if k in pending:
+                red = pending.pop(k)  # speculation hit: zero I/O
+            else:
+                if q == 1:
+                    red = run_pass(k)
+                else:
+                    # One sweep scores the needed column plus the top
+                    # q-1 remaining candidates by the CURRENT objective —
+                    # the same lazy-greedy bet that objectives shift
+                    # slowly between folds.  Short batches pad by
+                    # repeating the last column so the accumulate keeps
+                    # one compiled shape per q.
+                    cols = [k]
+                    for j in np.argsort(-g, kind="stable"):
+                        if len(cols) == q:
+                            break
+                        j = int(j)
+                        if mask[j] or j in pending or g[j] == _NEG_INF:
+                            continue
+                        cols.append(j)
+                    padded = cols + [cols[-1]] * (q - len(cols))
+                    reds = run_pass(padded, batch=q)
+                    for i, c in enumerate(cols):
+                        pending[c] = reds[i]
+                    red = pending.pop(k)
             cstate = crit.update(cstate, jnp.asarray(red), l)
+    finally:
+        if reader is not None:
+            reader.close()
+    io_report = io.as_dict()
+    if spill is not None:
+        io_report["cache"] = dict(spill.counters)
     return MRMRResult(
         selected=jnp.asarray(selected),
         gains=jnp.asarray(gains),
         relevance=jnp.asarray(rel),
         criterion=crit.name,
         engine="streaming",
+        io=io_report,
     )
 
 
@@ -299,4 +521,8 @@ def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
         feat_axes=plan.feat_axes,
         prefetch=plan.prefetch,
         criterion=plan.criterion,
+        batch_candidates=plan.batch_candidates,
+        spill_dir=plan.spill_dir,
+        spill_budget_bytes=plan.spill_budget_bytes,
+        readahead=plan.readahead,
     )

@@ -27,6 +27,19 @@ bounded host thread reads and pads block ``i+1`` while the consumer
 places (async ``device_put``) and the device accumulates block ``i``, so
 streaming throughput approaches the device-bound in-memory rate instead
 of serialising source I/O with placement.
+
+``CrossPassReader`` extends the same overlap across *pass boundaries*:
+the streaming engine visits the source once per selection, and between
+passes the synchronous path stalls — finalize, host argmax, then pass
+``l+1`` starts reading from byte zero.  But block *reads* never depend
+on the just-picked column (only the pass-target extraction does, and
+that is a cheap host slice at consume time), so a reader thread can keep
+streaming blocks of pass ``l+1`` while the device finishes pass ``l``.
+
+Batched redundancy passes (``batch_candidates > 1``) reuse all of this
+unchanged except for a leading candidate axis: targets become ``(q, B)``
+and statistics leaves ``(q, N, ...)`` — ``stage``/``place`` and
+``state_shardings`` recognise both layouts.
 """
 
 from __future__ import annotations
@@ -44,6 +57,40 @@ from repro.dist.sharding import axes_tuple, mesh_extent
 
 # End-of-stream sentinel for the prefetch queue.
 _DONE = object()
+
+# End-of-pass sentinel for the cross-pass read-ahead queue.
+_PASS_END = object()
+
+
+def resolve_prefetch(prefetch, backend: str | None = None) -> int:
+    """Resolve the ``prefetch`` knob: an int passes through, ``"auto"``
+    applies the measured heuristic.
+
+    Heuristic: the staging thread only pays off when placement blocks the
+    consumer — i.e. on backends with *blocking* host-to-device transfers
+    (GPU/TPU), where overlapping the numpy stage with the transfer hides
+    real latency.  On the CPU backend ``device_put`` and the accumulate
+    dispatch are already asynchronous, so the synchronous placer never
+    stalls and the extra thread only buys queue handoffs plus GIL/
+    threadpool contention with XLA's own workers — measured ~15% *slower*
+    (``BENCH_streaming.json``: streaming@16384+pf2 755k rows/s vs pf0's
+    881k on the 200k x 256 case).  So ``"auto"`` = 0 on CPU, 2 elsewhere.
+    """
+    if prefetch != "auto":
+        try:
+            p = int(prefetch)
+        except (TypeError, ValueError):
+            raise ValueError(
+                f"prefetch must be an int >= 0 or 'auto', got {prefetch!r}"
+            ) from None
+        if p < 0:
+            raise ValueError(f"prefetch must be >= 0 or 'auto', got {p}")
+        return p
+    if backend is None:
+        import jax  # local: keep module importable pre-XLA-init
+
+        backend = jax.default_backend()
+    return 0 if backend == "cpu" else 2
 
 
 def effective_block_obs(block_obs: int, obs_extent: int) -> int:
@@ -117,8 +164,9 @@ class BlockPlacer:
             fspec = feat if feat else None
             self._shard_mat = NamedSharding(self.mesh, P(ospec, fspec))
             self._shard_vec = NamedSharding(self.mesh, P(ospec))
+            self._shard_tgt2 = NamedSharding(self.mesh, P(None, ospec))
         else:
-            self._shard_mat = self._shard_vec = None
+            self._shard_mat = self._shard_vec = self._shard_tgt2 = None
 
     @property
     def padded_features(self) -> int:
@@ -131,24 +179,27 @@ class BlockPlacer:
 
     def state_shardings(self, state):
         """Shardings for a statistics pytree (None when there is no mesh):
-        leaves with a leading ``padded_features`` dim shard over
-        ``feat_axes``, everything else (scalars, running counts) is
-        replicated.  Used both to place the initial state and as the
-        accumulate step's ``out_shardings``, pinning the state layout so
-        per-device statistics memory scales with ``1/feature-shards``."""
+        leaves with a ``padded_features`` dim in position 0 — or position 1
+        behind a leading candidate-batch axis (batched redundancy passes
+        carry ``(q, N, ...)`` statistics) — shard over ``feat_axes``;
+        everything else (scalars, running counts) is replicated.  Used both
+        to place the initial state and as the accumulate step's
+        ``out_shardings``, pinning the state layout so per-device
+        statistics memory scales with ``1/feature-shards``."""
         if self.mesh is None:
             return None
 
         def sh(leaf):
             leaf = jnp.asarray(leaf)
-            if (
-                self.feat_axes
-                and self._feat_pad is not None
-                and leaf.ndim >= 1
-                and leaf.shape[0] == self._feat_pad
-            ):
-                spec = P(self.feat_axes, *([None] * (leaf.ndim - 1)))
-                return NamedSharding(self.mesh, spec)
+            if self.feat_axes and self._feat_pad is not None:
+                if leaf.ndim >= 1 and leaf.shape[0] == self._feat_pad:
+                    spec = P(self.feat_axes, *([None] * (leaf.ndim - 1)))
+                    return NamedSharding(self.mesh, spec)
+                if leaf.ndim >= 2 and leaf.shape[1] == self._feat_pad:
+                    # (q, N, ...) batched statistics: replicate the small
+                    # candidate axis, split the feature axis as usual.
+                    spec = P(None, self.feat_axes, *([None] * (leaf.ndim - 2)))
+                    return NamedSharding(self.mesh, spec)
             return NamedSharding(self.mesh, P())
 
         return jax.tree.map(sh, state)
@@ -166,9 +217,12 @@ class BlockPlacer:
         )
 
     def stage(self, X_block: np.ndarray, target: np.ndarray):
-        """Host half: pad a (B, N), (B,) block to the fixed (block_obs,
-        padded-features) shape + build the valid mask.  Pure numpy — safe
-        to run on a background thread (``PrefetchPlacer`` does)."""
+        """Host half: pad a (B, N) block + its target to the fixed
+        (block_obs, padded-features) shape and build the valid mask.  The
+        target is ``(B,)`` for single-target passes or ``(q, B)`` for
+        batched redundancy passes (padded along its observation axis
+        either way).  Pure numpy — safe to run on a background thread
+        (``PrefetchPlacer`` does)."""
         b, nf = X_block.shape
         if b > self.block_obs:
             raise ValueError(
@@ -183,7 +237,8 @@ class BlockPlacer:
             X_block = np.concatenate(
                 [X_block, np.zeros((pad,) + X_block.shape[1:], X_block.dtype)]
             )
-            target = np.concatenate([target, np.zeros((pad,), target.dtype)])
+            tpad = np.zeros(target.shape[:-1] + (pad,), target.dtype)
+            target = np.concatenate([target, tpad], axis=-1)
         if self._feat_pad is not None and nf < self._feat_pad:
             # Zero-filled pad columns: their statistics rows are junk by
             # construction and the engine slices them off after finalize.
@@ -201,12 +256,15 @@ class BlockPlacer:
 
     def place(self, staged):
         """Device half: land a staged (X, target, valid) triple per the
-        mesh plan.  ``device_put`` is async — it enqueues and returns."""
+        mesh plan.  ``device_put`` is async — it enqueues and returns.
+        A 2-D ``(q, B)`` batched target shards its observation axis like
+        the 1-D case, with the candidate axis replicated."""
         X_block, target, valid = staged
         if self._shard_mat is not None:
+            tgt_sh = self._shard_vec if target.ndim == 1 else self._shard_tgt2
             return (
                 jax.device_put(X_block, self._shard_mat),
-                jax.device_put(target, self._shard_vec),
+                jax.device_put(target, tgt_sh),
                 jax.device_put(valid, self._shard_vec),
             )
         return jnp.asarray(X_block), jnp.asarray(target), jnp.asarray(valid)
@@ -273,3 +331,85 @@ class PrefetchPlacer:
                 except queue.Empty:
                     pass
                 worker.join(timeout=0.01)
+
+
+class CrossPassReader:
+    """Read blocks ahead *across pass boundaries* on one reader thread.
+
+    The streaming engine's pass loop has a structural bubble: while the
+    device finalizes pass ``l`` and the host folds/argmaxes, nobody is
+    reading pass ``l+1`` — yet which blocks a pass reads never depends on
+    the pick (only the target-column *extraction* does, and the engine
+    extracts at consume time).  This reader keeps one thread iterating
+    ``make_pass()`` — a fresh raw ``(X, y)`` host-block iterator per call
+    — pass after pass, up to ``depth`` blocks ahead through a bounded
+    queue, so the tail of pass ``l`` overlaps the head of pass ``l+1``.
+
+    The consumer pulls whole passes in order via :meth:`next_pass` and
+    must call :meth:`close` (or exhaust ``max_passes``) to stop the
+    thread.  Read/parse exceptions re-raise in the consumer at the block
+    they correspond to.
+    """
+
+    def __init__(self, make_pass, depth: int = 2, max_passes: int | None = None):
+        if depth < 1:
+            raise ValueError(f"read-ahead depth must be >= 1, got {depth}")
+        if max_passes is not None and max_passes < 1:
+            raise ValueError(f"max_passes must be >= 1, got {max_passes}")
+        self._make_pass = make_pass
+        self._max_passes = max_passes
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+        self._passes_started = 0
+        self._worker = threading.Thread(
+            target=self._produce, name="cross-pass-readahead", daemon=True
+        )
+        self._worker.start()
+
+    def _produce(self):
+        try:
+            p = 0
+            while self._max_passes is None or p < self._max_passes:
+                self._passes_started += 1
+                for blk in self._make_pass():
+                    if self._stop.is_set():
+                        return
+                    self._q.put((blk, None))
+                self._q.put((_PASS_END, None))
+                if self._stop.is_set():
+                    return
+                p += 1
+            self._q.put((_DONE, None))
+        except BaseException as exc:  # re-raised by the consumer
+            self._q.put((None, exc))
+
+    def next_pass(self):
+        """Iterator over the next pass's raw ``(X, y)`` host blocks."""
+        while True:
+            item, exc = self._q.get()
+            if exc is not None:
+                raise exc
+            if item is _PASS_END:
+                return
+            if item is _DONE:
+                raise RuntimeError(
+                    "CrossPassReader exhausted: next_pass() called after "
+                    f"max_passes={self._max_passes} passes were consumed"
+                )
+            yield item
+
+    def close(self):
+        """Stop the reader thread and drop any read-ahead blocks."""
+        self._stop.set()
+        while self._worker.is_alive():
+            try:  # unblock a producer waiting on a full queue
+                self._q.get_nowait()
+            except queue.Empty:
+                pass
+            self._worker.join(timeout=0.01)
+
+    def __enter__(self) -> "CrossPassReader":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

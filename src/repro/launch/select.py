@@ -27,6 +27,14 @@
     PYTHONPATH=src python -m repro.launch.select \
         --input floats.csv --bins 32 --block-obs 65536
 
+    # Cut the L-pass I/O tax: speculate 8 redundancy candidates per pass
+    # (select=32 drops from 31 redundancy passes toward 4-5) and spill
+    # parsed/encoded blocks so passes 2..L replay memmapped chunks —
+    # selections stay bitwise-identical to the plain streaming engine:
+    PYTHONPATH=src python -m repro.launch.select \
+        --input data.csv --select 32 --batch-candidates 8 \
+        --spill-dir /tmp/spill --readahead 2
+
 Inputs: ``--input data.npz`` (arrays ``X`` rows=observations, ``y``) loads
 in-memory; ``--input data.npy`` (+ ``--target target.npy``) memmaps and
 streams block-by-block through the ``streaming`` engine; ``--input
@@ -121,9 +129,24 @@ def main(argv=None) -> dict:
     ap.add_argument("--block", type=int, default=64)
     ap.add_argument("--block-obs", type=int, default=65536,
                     help="observations per streamed block (DataSource inputs)")
-    ap.add_argument("--prefetch", type=int, default=2,
+    ap.add_argument("--prefetch", default="auto",
                     help="streamed blocks placed ahead of device "
-                         "accumulation (0 = synchronous placer)")
+                         "accumulation (0 = synchronous placer; 'auto' "
+                         "= off on CPU, 2 elsewhere)")
+    ap.add_argument("--batch-candidates", type=int, default=1,
+                    help="redundancy vectors speculated per streamed pass "
+                         "(q): cuts select=L from L-1 redundancy passes "
+                         "toward ceil((L-1)/q); selections are identical")
+    ap.add_argument("--spill-dir", default=None,
+                    help="encoded-block spill cache directory: pass 1 "
+                         "spills parsed/encoded blocks as .npy chunks, "
+                         "passes 2..L replay them memmapped")
+    ap.add_argument("--spill-budget-mb", type=int, default=0,
+                    help="LRU byte budget for --spill-dir in MiB (0 = "
+                         "unbounded)")
+    ap.add_argument("--readahead", type=int, default=0,
+                    help="raw blocks read ahead across pass boundaries "
+                         "(0 = off; supersedes --prefetch)")
     ap.add_argument("--bins", type=int, default=0,
                     help="quantile-discretise continuous features into this "
                          "many equal-frequency bins (one streaming sketch "
@@ -166,13 +189,18 @@ def main(argv=None) -> dict:
         feat = args.mesh_feat or max(n_dev // obs, 1)
         mesh = make_mesh((obs, feat), ("data", "model"))
 
+    prefetch = args.prefetch if args.prefetch == "auto" else int(args.prefetch)
     t0 = time.time()
     sel = MRMRSelector(
         num_select=args.select, score=score, criterion=args.criterion,
         encoding=args.encoding, mesh=mesh,
         incremental=bool(args.incremental), block=args.block,
-        block_obs=args.block_obs, prefetch=args.prefetch,
+        block_obs=args.block_obs, prefetch=prefetch,
         bins=args.bins or None,
+        batch_candidates=args.batch_candidates,
+        spill_dir=args.spill_dir,
+        spill_budget_bytes=args.spill_budget_mb * 2**20 or None,
+        readahead=args.readahead,
     )
     sel = sel.fit(source) if source is not None else sel.fit(X, y)
     plan = sel.plan_
@@ -188,7 +216,15 @@ def main(argv=None) -> dict:
     }
     if plan.encoding == "streaming":
         out["block_obs"] = plan.block_obs  # effective (rounded) size
-        out["prefetch"] = plan.prefetch
+        out["prefetch"] = plan.prefetch   # resolved ("auto" -> int)
+        if plan.batch_candidates > 1:
+            out["batch_candidates"] = plan.batch_candidates
+        if plan.spill_dir is not None:
+            out["spill_dir"] = plan.spill_dir
+        if plan.readahead:
+            out["readahead"] = plan.readahead
+        if sel.result_.io is not None:
+            out["io"] = sel.result_.io
     if plan.bins is not None:
         out["bins"] = plan.bins
     if args.output:

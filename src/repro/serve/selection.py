@@ -16,10 +16,11 @@ front end that exploits that:
 * **Content-addressed result cache** — cache-aside over
   ``sha256(source.fingerprint() × score × criterion × num_select ×
   encoding)`` with an LRU bound: a repeat submission is DONE at submit
-  time with zero engine or I/O passes.  ``block_obs``/``prefetch`` are
-  deliberately NOT part of the address — selections are block-size
-  independent (tested repo invariant), so every execution geometry of the
-  same fit shares one cache line.  An optional ``cache_dir`` spills
+  time with zero engine or I/O passes.  ``block_obs``/``prefetch``/
+  ``batch_candidates``/``spill_dir``/``readahead`` are deliberately NOT
+  part of the address — selections are block-size independent and
+  batched/spilled runs are bitwise-identical (tested repo invariants),
+  so every execution geometry of the same fit shares one cache line.  An optional ``cache_dir`` spills
   entries as JSON (``MRMRResult.to_json``) and reads them back
   (read-through), surviving restarts.
 * **Request coalescing / idempotency keys** — a stampede of identical
@@ -144,15 +145,19 @@ class SelectionRequest:
     criterion: Criterion
     encoding: str = "auto"
     block_obs: int = 65536
-    prefetch: int = 2
+    prefetch: int | str = "auto"
+    batch_candidates: int = 1
+    spill_dir: str | None = None
+    readahead: int = 0
 
     def cache_key(self) -> str:
         """The content address: what the *result* depends on, nothing more.
 
-        ``block_obs`` / ``prefetch`` only change how the fit executes, not
-        what it selects (block-size independence is a tested invariant),
-        so they are excluded — every geometry of the same fit coalesces
-        onto one cache line.
+        ``block_obs`` / ``prefetch`` / ``batch_candidates`` / ``spill_dir``
+        / ``readahead`` only change how the fit executes, not what it
+        selects (block-size independence and batched/spilled bitwise
+        equivalence are tested invariants), so they are excluded — every
+        execution geometry of the same fit coalesces onto one cache line.
         """
         payload = "|".join(
             (
@@ -414,7 +419,10 @@ class SelectionService:
         criterion: Criterion | str = "mid",
         encoding: str = "auto",
         block_obs: int = 65536,
-        prefetch: int = 2,
+        prefetch: int | str = "auto",
+        batch_candidates: int = 1,
+        spill_dir: str | None = None,
+        readahead: int = 0,
         bins: int | None = None,
     ) -> str:
         """Enqueue a fit; returns a job id immediately.
@@ -472,7 +480,10 @@ class SelectionService:
         request = SelectionRequest(
             source=source, num_select=int(num_select), score=score,
             criterion=resolve_criterion(criterion), encoding=encoding,
-            block_obs=int(block_obs), prefetch=int(prefetch),
+            block_obs=int(block_obs),
+            prefetch=prefetch if prefetch == "auto" else int(prefetch),
+            batch_candidates=int(batch_candidates), spill_dir=spill_dir,
+            readahead=int(readahead),
         )
         key = request.cache_key()
         cached = self.cache.get(key)
@@ -688,6 +699,9 @@ def _default_fit(request: SelectionRequest) -> MRMRResult:
         encoding=request.encoding,
         block_obs=request.block_obs,
         prefetch=request.prefetch,
+        batch_candidates=request.batch_candidates,
+        spill_dir=request.spill_dir,
+        readahead=request.readahead,
     )
     sel.fit(request.source)
     return sel.result_

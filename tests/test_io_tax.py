@@ -1,0 +1,524 @@
+"""The L-pass I/O tax knobs: batched redundancy, the encoded-block spill
+cache, cross-pass read-ahead and the prefetch-auto heuristic.
+
+The acceptance bar for all three knobs is the same: selections bitwise-
+identical to the plain streaming engine under every combination, with the
+I/O savings ASSERTED from the engine's pass/bytes ledger, never eyeballed.
+"""
+
+import json
+import os
+
+import numpy as np
+import jax
+import pytest
+
+from repro import MIScore, MRMRSelector, PearsonMIScore
+from repro.core.mrmr import MRMRResult
+from repro.core.streaming import mrmr_streaming
+from repro.data.binning import BinnedSource
+from repro.data.block_cache import BlockCacheSource
+from repro.data.sources import ArraySource, CSVSource, CorralSource
+from repro.dist import factor_mesh, make_mesh
+from repro.dist.streaming import CrossPassReader, resolve_prefetch
+
+
+@pytest.fixture(scope="module")
+def corral():
+    return CorralSource(1500, 24, seed=3).materialize()
+
+
+@pytest.fixture(scope="module")
+def baseline(corral):
+    X, y = corral
+    res = mrmr_streaming(
+        ArraySource(X, y), 6, MIScore(2, 2), block_obs=300, prefetch=0
+    )
+    return res
+
+
+class CountingSource(ArraySource):
+    """ArraySource that counts iter_blocks passes — the 'CSV parse' proxy
+    for asserting the spill cache really stops re-reading the base."""
+
+    def __init__(self, X, y):
+        super().__init__(X, y)
+        self.calls = []
+
+    def iter_blocks(self, block_obs):
+        self.calls.append(block_obs)
+        return super().iter_blocks(block_obs)
+
+
+def _same(res, want):
+    np.testing.assert_array_equal(
+        np.asarray(res.selected), np.asarray(want.selected)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(res.gains), np.asarray(want.gains)
+    )
+
+
+class TestBatchedRedundancy:
+    # 300 divides 1500; 413 doesn't — batched picks must not depend on
+    # how observations fall into blocks.
+    @pytest.mark.parametrize("q", [2, 4, 8])
+    @pytest.mark.parametrize("block_obs", [300, 413])
+    def test_bitwise_identical_to_unbatched(self, corral, baseline, q,
+                                            block_obs):
+        X, y = corral
+        res = mrmr_streaming(
+            ArraySource(X, y), 6, MIScore(2, 2), block_obs=block_obs,
+            prefetch=0, batch_candidates=q,
+        )
+        _same(res, baseline)
+
+    def test_pass_count_drops(self, corral):
+        # The acceptance bound: select=32 at q=8 in <= 6 iter_blocks
+        # passes (1 relevance + ceil(31/8) redundancy + misses).
+        X, y = CorralSource(4000, 64, seed=1).materialize()
+        src = CountingSource(X, y)
+        res = mrmr_streaming(
+            src, 32, MIScore(2, 2), block_obs=1000, prefetch=0,
+            batch_candidates=8,
+        )
+        assert len(src.calls) == res.io["passes"] <= 6
+        want = mrmr_streaming(
+            ArraySource(X, y), 32, MIScore(2, 2), block_obs=1000, prefetch=0
+        )
+        assert want.io["passes"] == 32
+        _same(res, want)
+
+    def test_q1_is_the_classic_loop(self, corral, baseline):
+        X, y = corral
+        res = mrmr_streaming(
+            ArraySource(X, y), 6, MIScore(2, 2), block_obs=300,
+            prefetch=0, batch_candidates=1,
+        )
+        _same(res, baseline)
+        assert res.io["passes"] == 6  # 1 relevance + 5 redundancy
+
+    def test_pearson_batched_bitwise(self):
+        # f32 running moments through the vmapped accumulate: each slice
+        # must run the identical arithmetic as the single-target step.
+        rng = np.random.default_rng(7)
+        X = rng.normal(size=(900, 40)).astype(np.float32)
+        y = (X[:, :3].sum(1) > 0).astype(np.float32)
+        src = ArraySource(X, y)
+        want = mrmr_streaming(src, 6, PearsonMIScore(), block_obs=250,
+                              prefetch=0)
+        for q in (2, 4):
+            got = mrmr_streaming(
+                src, 6, PearsonMIScore(), block_obs=250, prefetch=0,
+                batch_candidates=q,
+            )
+            _same(got, want)
+
+    def test_tie_break(self):
+        # Duplicate columns produce exactly tied objectives at every pick;
+        # batched speculation must commit the same lowest-id winners.
+        rng = np.random.default_rng(0)
+        base = rng.integers(0, 2, size=(400, 4), dtype=np.int32)
+        X = np.concatenate([base, base, base], axis=1)  # 12 cols, 3x dupes
+        y = base[:, 0] ^ base[:, 1]
+        src = ArraySource(X, y)
+        want = mrmr_streaming(src, 6, MIScore(2, 2), block_obs=128,
+                              prefetch=0)
+        for q in (2, 4, 8):
+            got = mrmr_streaming(src, 6, MIScore(2, 2), block_obs=128,
+                                 prefetch=0, batch_candidates=q)
+            _same(got, want)
+
+    def test_q_guard(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="batch_candidates"):
+            mrmr_streaming(ArraySource(X, y), 2, MIScore(2, 2),
+                           batch_candidates=0)
+
+
+class TestSpillCache:
+    def test_replay_matches_direct(self, corral, baseline, tmp_path):
+        X, y = corral
+        src = CountingSource(X, y)
+        cached = BlockCacheSource(src, str(tmp_path))
+        res1 = mrmr_streaming(cached, 6, MIScore(2, 2), block_obs=300,
+                              prefetch=0)
+        _same(res1, baseline)
+        # pass 1 staged from the base; passes 2..6 replayed from the spill
+        # (calls at other block sizes are the memoised fingerprint scan)
+        assert src.calls.count(300) == 1
+        assert cached.counters["parse_passes"] == 1
+        assert cached.counters["replay_passes"] == 5
+        assert cached.counters["parsed_bytes"] > 0
+
+    def test_second_fit_never_touches_base(self, corral, baseline, tmp_path):
+        X, y = corral
+        # same source class both times: the fingerprint (which keys the
+        # spill entry) folds the type name in
+        warm = BlockCacheSource(CountingSource(X, y), str(tmp_path))
+        mrmr_streaming(warm, 6, MIScore(2, 2), block_obs=300, prefetch=0)
+        src = CountingSource(X, y)
+        cached = BlockCacheSource(src, str(tmp_path))
+        res = mrmr_streaming(cached, 6, MIScore(2, 2), block_obs=300,
+                             prefetch=0)
+        _same(res, baseline)
+        assert src.calls.count(300) == 0  # zero block reads: all replayed
+        assert cached.counters["parse_passes"] == 0
+        assert res.io["cache"]["parsed_bytes"] == 0
+
+    def test_engine_spill_dir_knob(self, corral, baseline, tmp_path):
+        X, y = corral
+        res = mrmr_streaming(
+            ArraySource(X, y), 6, MIScore(2, 2), block_obs=300, prefetch=0,
+            spill_dir=str(tmp_path),
+        )
+        _same(res, baseline)
+        assert res.io["cache"]["parse_passes"] == 1
+
+    def test_block_size_keys_entries(self, corral, tmp_path):
+        # Different block_obs = different chunk geometry = separate entry.
+        X, y = corral
+        c = BlockCacheSource(ArraySource(X, y), str(tmp_path))
+        list(c.iter_blocks(300))
+        list(c.iter_blocks(500))
+        assert c.spilled_bytes(300) and c.spilled_bytes(500)
+        assert c.counters["parse_passes"] == 2
+        list(c.iter_blocks(300))
+        assert c.counters["replay_passes"] == 1
+
+    def test_binned_composition(self, tmp_path):
+        # Wrapping a BinnedSource spills the ENCODED int codes at a narrow
+        # dtype; the replayed fit must still match the fused direct path.
+        rng = np.random.default_rng(3)
+        X = rng.normal(size=(800, 32)).astype(np.float32)
+        y = (X[:, 0] + X[:, 5] > 0).astype(np.int32)
+        binned = BinnedSource(ArraySource(X, y), 16, fit_block_obs=200)
+        score = MIScore(num_values=16, num_classes=2)
+        want = mrmr_streaming(binned, 5, score, block_obs=200, prefetch=0)
+        cached = BlockCacheSource(binned, str(tmp_path))
+        got = mrmr_streaming(cached, 5, score, block_obs=200, prefetch=0,
+                             batch_candidates=4)
+        _same(got, want)
+        assert cached.feature_dtype == np.int8  # 16 bins spill as int8
+        # spilled codes are 4x smaller than the float32 base blocks
+        assert cached.spilled_bytes(200) < X.nbytes
+        got2 = mrmr_streaming(cached, 5, score, block_obs=200, prefetch=0)
+        _same(got2, want)
+
+    def test_truncated_chunk_detected_and_restaged(self, corral, baseline,
+                                                   tmp_path):
+        # Crash-after-manifest: a chunk torn AFTER the manifest landed must
+        # be caught by the size check and the pass re-staged from the base
+        # — a corrupt spill may cost a pass, never a wrong selection.
+        X, y = corral
+        c1 = BlockCacheSource(ArraySource(X, y), str(tmp_path))
+        list(c1.iter_blocks(300))
+        entry = c1._entry_dir(300)
+        chunk = os.path.join(entry, "X00002.npy")
+        with open(chunk, "r+b") as f:
+            f.truncate(os.path.getsize(chunk) // 2)
+        src = CountingSource(X, y)
+        c2 = BlockCacheSource(src, str(tmp_path))
+        res = mrmr_streaming(c2, 6, MIScore(2, 2), block_obs=300, prefetch=0)
+        _same(res, baseline)
+        assert c2.counters["parse_passes"] == 1  # re-staged, not reused
+        assert src.calls.count(300) == 1
+        assert c2.counters["replay_passes"] == 5  # repaired entry replays
+
+    def test_crash_before_manifest_never_replays(self, corral, tmp_path):
+        # Chunks without a manifest (crash mid-stage) are not an entry.
+        X, y = corral
+        entry = os.path.join(str(tmp_path), "deadbeef-b300")
+        os.makedirs(entry)
+        np.save(os.path.join(entry, "X00000.npy"), X[:300])
+        src = CountingSource(X, y)
+        c = BlockCacheSource(src, str(tmp_path))
+        list(c.iter_blocks(300))
+        assert c.counters["parse_passes"] == 1
+
+    def test_lru_eviction_respects_budget(self, tmp_path):
+        X1, y1 = CorralSource(600, 16, seed=1).materialize()
+        X2, y2 = CorralSource(600, 16, seed=2).materialize()
+        c1 = BlockCacheSource(ArraySource(X1, y1), str(tmp_path))
+        list(c1.iter_blocks(200))
+        sz = c1.spilled_bytes(200)
+        # budget fits ONE entry: writing the second must evict the first
+        c2 = BlockCacheSource(
+            ArraySource(X2, y2), str(tmp_path), budget_bytes=sz + sz // 2
+        )
+        list(c2.iter_blocks(200))
+        assert c2.spilled_bytes(200) is not None  # just-written kept
+        assert c1.spilled_bytes(200) is None      # LRU victim
+
+    def test_guards(self, corral, tmp_path):
+        X, y = corral
+        src = ArraySource(X, y)
+        with pytest.raises(TypeError, match="DataSource"):
+            BlockCacheSource(X, str(tmp_path))
+        with pytest.raises(ValueError, match="already"):
+            BlockCacheSource(
+                BlockCacheSource(src, str(tmp_path)), str(tmp_path)
+            )
+        with pytest.raises(ValueError, match="budget"):
+            BlockCacheSource(src, str(tmp_path), budget_bytes=0)
+
+    def test_fingerprint_delegates(self, corral, tmp_path):
+        # Same content, same address: the service's result cache must
+        # coalesce spilled and direct fits of the same source.
+        X, y = corral
+        src = ArraySource(X, y)
+        assert BlockCacheSource(src, str(tmp_path)).fingerprint() == \
+            src.fingerprint()
+
+
+class TestReadahead:
+    def test_cross_pass_reader_replays_passes(self):
+        X = np.arange(12, dtype=np.int32).reshape(6, 2)
+        y = np.zeros(6, np.int32)
+        src = CountingSource(X, y)
+        reader = CrossPassReader(
+            lambda: src.iter_blocks(2), depth=2, max_passes=3
+        )
+        try:
+            for _ in range(3):
+                blocks = list(reader.next_pass())
+                assert len(blocks) == 3
+                np.testing.assert_array_equal(
+                    np.concatenate([b[0] for b in blocks]), X
+                )
+            with pytest.raises(RuntimeError, match="exhausted"):
+                next(reader.next_pass())
+        finally:
+            reader.close()
+
+    def test_reader_close_stops_thread(self):
+        import threading
+
+        produced = []
+
+        def make_pass():
+            for i in range(1000):
+                produced.append(i)
+                yield np.zeros((2, 1), np.int8), np.zeros(2, np.int8)
+
+        reader = CrossPassReader(make_pass, depth=1, max_passes=100)
+        it = reader.next_pass()
+        next(it)
+        reader.close()
+        assert len(produced) < 1000
+        assert not any(
+            t.name == "cross-pass-reader" and t.is_alive()
+            for t in threading.enumerate()
+        )
+
+    def test_reader_propagates_errors(self):
+        def make_pass():
+            yield np.zeros((2, 1), np.int8), np.zeros(2, np.int8)
+            raise RuntimeError("disk died")
+
+        reader = CrossPassReader(make_pass, depth=1, max_passes=2)
+        try:
+            with pytest.raises(RuntimeError, match="disk died"):
+                list(reader.next_pass())
+        finally:
+            reader.close()
+
+    def test_readahead_matches_baseline(self, corral, baseline):
+        X, y = corral
+        for depth in (1, 3):
+            res = mrmr_streaming(
+                ArraySource(X, y), 6, MIScore(2, 2), block_obs=300,
+                readahead=depth,
+            )
+            _same(res, baseline)
+
+    def test_maxrel_single_pass_with_readahead(self, corral):
+        # maxrel needs ONE pass: the reader must not over-read the source.
+        X, y = corral
+        src = CountingSource(X, y)
+        res = mrmr_streaming(
+            src, 4, MIScore(2, 2), block_obs=300, readahead=2,
+            criterion="maxrel",
+        )
+        assert res.io["passes"] == 1
+        assert len(src.calls) == 1
+
+    def test_guard(self, corral):
+        X, y = corral
+        with pytest.raises(ValueError, match="readahead"):
+            mrmr_streaming(ArraySource(X, y), 2, MIScore(2, 2), readahead=-1)
+
+
+class TestCombined:
+    @pytest.mark.parametrize("block_obs", [300, 413])
+    def test_all_knobs_bitwise(self, corral, baseline, tmp_path, block_obs):
+        X, y = corral
+        res = mrmr_streaming(
+            ArraySource(X, y), 6, MIScore(2, 2), block_obs=block_obs,
+            batch_candidates=4, spill_dir=str(tmp_path), readahead=2,
+        )
+        _same(res, baseline)
+        assert res.io["passes"] < 6
+        assert res.io["cache"]["parse_passes"] == 1
+
+    def test_obs_sharded_mesh(self, corral, baseline, tmp_path):
+        X, y = corral
+        mesh = make_mesh((len(jax.devices()),), ("data",))
+        res = mrmr_streaming(
+            ArraySource(X, y), 6, MIScore(2, 2), block_obs=300, mesh=mesh,
+            batch_candidates=4, spill_dir=str(tmp_path),
+        )
+        _same(res, baseline)
+
+    def test_wide_feature_sharded_mesh(self, tmp_path):
+        # Wide regime: the q-leading batched statistics state must shard
+        # over the feature axis through state_shardings like the classic
+        # state does.
+        X, y = CorralSource(300, 256, seed=5).materialize()
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        want = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=100
+        ).fit(ArraySource(X, y))
+        got = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=100,
+            batch_candidates=4, spill_dir=str(tmp_path),
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_array_equal(got.gains_, want.gains_)
+
+    def test_2d_grid_mesh(self, tmp_path):
+        X, y = CorralSource(400, 64, seed=6).materialize()
+        od, fd = factor_mesh(len(jax.devices()))
+        mesh = make_mesh((od, fd), ("data", "model"))
+        want = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=100
+        ).fit(ArraySource(X, y))
+        got = MRMRSelector(
+            num_select=5, score=MIScore(2, 2), mesh=mesh, block_obs=100,
+            batch_candidates=8, spill_dir=str(tmp_path), readahead=2,
+        ).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_array_equal(got.gains_, want.gains_)
+
+    def test_selector_knobs_and_plan(self, corral, tmp_path):
+        X, y = corral
+        sel = MRMRSelector(
+            num_select=4, score=MIScore(2, 2), block_obs=300,
+            batch_candidates=4, spill_dir=str(tmp_path), readahead=1,
+        ).fit(ArraySource(X, y))
+        assert sel.plan_.batch_candidates == 4
+        assert sel.plan_.spill_dir == str(tmp_path)
+        assert sel.plan_.readahead == 1
+        assert sel.result_.io is not None
+        assert sel.result_.io["cache"]["parse_passes"] == 1
+
+    def test_csv_pass2_bytes_zero(self, tmp_path):
+        # The acceptance wording verbatim: with the spill cache on,
+        # pass-2+ bytes parsed from CSV must be 0.
+        rng = np.random.default_rng(0)
+        X = rng.integers(0, 2, size=(200, 8))
+        y = rng.integers(0, 2, size=200)
+        path = tmp_path / "data.csv"
+        rows = "\n".join(
+            ",".join(map(str, list(xr) + [yi])) for xr, yi in zip(X, y)
+        )
+        path.write_text("\n".join(f"f{i}" for i in range(9)).replace("\n", ",")
+                        + "\n" + rows + "\n")
+        src = CSVSource(str(path), dtype=np.int32)
+        res = mrmr_streaming(
+            src, 4, MIScore(2, 2), block_obs=64, prefetch=0,
+            spill_dir=str(tmp_path / "spill"),
+        )
+        cache = res.io["cache"]
+        assert cache["parse_passes"] == 1
+        assert cache["replay_passes"] == res.io["passes"] - 1
+        want = mrmr_streaming(src, 4, MIScore(2, 2), block_obs=64, prefetch=0)
+        _same(res, want)
+
+
+class TestPrefetchAuto:
+    def test_resolve(self):
+        assert resolve_prefetch("auto", backend="cpu") == 0
+        assert resolve_prefetch("auto", backend="tpu") == 2
+        assert resolve_prefetch("auto", backend="gpu") == 2
+        assert resolve_prefetch(3, backend="cpu") == 3
+        assert resolve_prefetch(0, backend="tpu") == 0
+        with pytest.raises(ValueError, match="prefetch"):
+            resolve_prefetch(-1)
+        with pytest.raises(ValueError, match="prefetch"):
+            resolve_prefetch("fast")
+
+    def test_selector_default_resolves_in_plan(self, corral):
+        X, y = corral
+        sel = MRMRSelector(num_select=2, score=MIScore(2, 2),
+                           block_obs=500).fit(ArraySource(X, y))
+        assert sel.plan_.prefetch == resolve_prefetch("auto")
+        assert isinstance(sel.plan_.prefetch, int)
+
+
+class TestIOAccounting:
+    def test_counters_consistent(self, corral):
+        X, y = corral
+        res = mrmr_streaming(ArraySource(X, y), 4, MIScore(2, 2),
+                             block_obs=300, prefetch=0)
+        assert res.io["passes"] == 4
+        assert res.io["blocks_read"] == 4 * 5  # 1500/300 blocks per pass
+        assert res.io["bytes_read"] == 4 * (X.nbytes + y.nbytes)
+
+    def test_result_json_roundtrip(self, corral):
+        X, y = corral
+        res = mrmr_streaming(ArraySource(X, y), 3, MIScore(2, 2),
+                             block_obs=500, prefetch=0)
+        back = MRMRResult.from_json(res.to_json())
+        assert back.io == res.io
+        assert json.loads(res.to_json())["io"]["passes"] == 3
+
+    def test_in_memory_result_has_no_io(self, corral):
+        X, y = corral
+        sel = MRMRSelector(num_select=3, score=MIScore(2, 2)).fit(X, y)
+        assert sel.result_.io is None
+        back = MRMRResult.from_json(sel.result_.to_json())
+        assert back.io is None
+
+
+class TestServeKnobs:
+    def test_cache_key_excludes_execution_knobs(self, corral):
+        from repro.core.criteria import resolve_criterion
+        from repro.serve.selection import SelectionRequest
+
+        X, y = corral
+        src = ArraySource(X, y)
+        base = SelectionRequest(
+            source=src, num_select=4, score=MIScore(2, 2),
+            criterion=resolve_criterion("mid"),
+        )
+        variant = SelectionRequest(
+            source=src, num_select=4, score=MIScore(2, 2),
+            criterion=resolve_criterion("mid"), block_obs=128, prefetch=0,
+            batch_candidates=8, spill_dir="/tmp/spill", readahead=2,
+        )
+        assert base.cache_key() == variant.cache_key()
+        other = SelectionRequest(
+            source=src, num_select=5, score=MIScore(2, 2),
+            criterion=resolve_criterion("mid"),
+        )
+        assert base.cache_key() != other.cache_key()
+
+    def test_submit_with_knobs_coalesces(self, corral, tmp_path):
+        from repro.serve.selection import SelectionService
+
+        X, y = corral
+        with SelectionService(workers=1) as svc:
+            j1 = svc.submit(ArraySource(X, y), num_select=3,
+                            score=MIScore(2, 2))
+            r1 = svc.result(j1, timeout=60)
+            # same fit, different execution knobs: cache hit at submit
+            j2 = svc.submit(
+                ArraySource(X, y), num_select=3, score=MIScore(2, 2),
+                batch_candidates=4, spill_dir=str(tmp_path), readahead=1,
+            )
+            assert svc.poll(j2).cache_hit
+            r2 = svc.result(j2, timeout=60)
+            np.testing.assert_array_equal(
+                np.asarray(r1.selected), np.asarray(r2.selected)
+            )
