@@ -25,21 +25,25 @@ reproduce the plain streaming selections bitwise and records the
 engine's ``io`` ledger (passes / blocks / bytes, parse-vs-replay split)
 alongside the timing.
 
-``--criterion mid,miq`` adds a greedy-objective axis: the FIRST criterion
-runs the full (block x prefetch) grid on both datasets; each further
-criterion runs one tall cell (largest block, last prefetch depth) plus
-its own in-memory baseline — enough to show the criterion fold is free
-(the fold is O(N) host math per pick; passes/IO are identical), without
-doubling the grid.  Streaming cells must reproduce the in-memory
-selections OF THE SAME CRITERION.
+``--criterion mid,miq,jmi,cmim`` adds a greedy-objective axis: the FIRST
+criterion runs the full (block x prefetch) grid on both datasets; each
+further criterion runs one tall cell (largest block, last prefetch depth)
+plus its own in-memory baseline.  For the marginal folds (miq) the cell
+shows the fold is free (O(N) host math per pick; passes/IO identical to
+mid's same-block cell); for the conditional folds (jmi/cmim) it prices
+the class axis exactly — ``io.state_bytes`` doubles (d_c x the pair
+statistics) while passes and bytes_read stay identical to mid, because
+the 3-way count rides the same sweep via the fused-target trick.
+Streaming cells must reproduce the in-memory selections OF THE SAME
+CRITERION.
 
     PYTHONPATH=src python benchmarks/bench_streaming.py --rows 200000 \
         --cols 256 --select 10 --block-obs 16384,65536 --prefetch 0,2 \
-        --criterion mid,miq --out BENCH_streaming.json
+        --criterion mid,miq,jmi,cmim --out BENCH_streaming.json
 
 The committed ``BENCH_streaming.json`` at the repo root is the baseline
-(default sizes above, criteria ``mid,miq``) that later PRs compare their
-perf trajectory to.
+(default sizes above, criteria ``mid,miq,jmi,cmim``) that later PRs
+compare their perf trajectory to.
 """
 
 from __future__ import annotations
@@ -310,7 +314,7 @@ def main(argv=None) -> list:
     ap.add_argument("--readahead", type=int, default=2,
                     help="cross-pass read-ahead depth for the read-ahead "
                          "and combined cells")
-    ap.add_argument("--criterion", default="mid,miq",
+    ap.add_argument("--criterion", default="mid,miq,jmi,cmim",
                     help="comma-separated greedy objectives; the first runs "
                          "the full grid, the rest one tall cell each "
                          "(largest block, last prefetch) + in-memory "

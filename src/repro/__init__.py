@@ -104,9 +104,14 @@ Criterion`, orthogonal to both the score function and the encoding: the
 engines compute relevance/redundancy statistics and the criterion folds
 them into the per-candidate objective that is argmaxed.  Built-ins:
 ``mid`` (the paper's difference form, Eq. 1 — the default), ``miq``
-(the quotient form) and ``maxrel`` (relevance only; the streaming engine
-then needs a single pass of I/O).  Every criterion runs on every engine,
-in-memory or streaming, and selections agree engine-for-engine::
+(the quotient form), ``maxrel`` (relevance only; the streaming engine
+then needs a single pass of I/O), and the class-conditioned pair —
+``jmi`` (joint mutual information: mean of ``I(x_k; x_j | y) -
+I(x_k; x_j)`` over the selected set, added to relevance) and ``cmim``
+(Fleuret's conditional MI maximisation: the *min* of those gaps — a
+candidate is only as good as its most-redundant pairing).  Every
+criterion runs on every engine, in-memory or streaming, and selections
+agree engine-for-engine::
 
     sel = MRMRSelector(num_select=10, criterion="miq").fit(X, y)
     sel.result_.criterion, sel.result_.engine   # ("miq", "conventional")
@@ -114,15 +119,70 @@ in-memory or streaming, and selections agree engine-for-engine::
     sel.ranking_                                # 1-based selection rank
     sel.get_support()                           # boolean feature mask
 
-(CLI: ``python -m repro.launch.select --criterion miq``.)  Register your
-own fold with :func:`~repro.core.criteria.register_criterion`::
+    sel = MRMRSelector(num_select=10, criterion="jmi").fit(X, y)
+    sel = MRMRSelector(num_select=10, criterion="cmim", bins=32).fit(src)
+
+``jmi``/``cmim`` declare ``needs_conditional_redundancy = True``: each
+redundancy sweep then counts the 3-way ``(x_k value, x_j value, class)``
+table — the pair target fuses with the class into one code, so it is the
+SAME blocked one-hot einsum (and the same Pallas kernel tiling), just
+``d_c×`` wider — and both ``I(x_k; x_j)`` (class-summed) and ``I(x_k;
+x_j | y)`` fall out of that one sweep.  Criteria that never ask (mid/
+miq/maxrel) keep the exact pre-conditional graph: same state shapes,
+same bytes (streamed fits assert it via ``result_.io["state_bytes"]``).
+They need a score with a conditional decomposition — ``MIScore``, or
+``bins=`` to discretise first; anything else fails actionably at fit
+time.  (CLI: ``python -m repro.launch.select --criterion miq|jmi|
+cmim``.)
+
+Writing a criterion
+~~~~~~~~~~~~~~~~~~~
+
+Register your own fold with :func:`~repro.core.criteria.
+register_criterion`.  A criterion is three pure-jnp hooks — ``init_state
+(n)`` (per-candidate running state), ``update(state, terms, l)`` (fold
+redundancy statistics of pick ``l`` in), ``objective(rel, state, l)``
+(the vector that is argmaxed) — plus two declarative flags.  ``terms``
+is the marginal redundancy vector, or a ``{"marginal", "conditional"}``
+dict when the criterion declares ``needs_conditional_redundancy``; the
+helpers accept both forms::
 
     from repro import Criterion, register_criterion
+    from repro.core.criteria import conditional_terms, marginal_terms
 
     @register_criterion
-    class MID2(Criterion):
-        name = "mid2x"     # then: MRMRSelector(10, criterion="mid2x")
-        ...                # init_state / update / objective (pure jnp)
+    class WorstGap(Criterion):
+        name = "worstgap"  # then: MRMRSelector(10, criterion="worstgap")
+        needs_conditional_redundancy = True   # ask for I(x_k; x_j | y)
+        def init_state(self, n): ...          # pytree of (n,) leaves
+        def update(self, state, terms, l):
+            gap = conditional_terms(terms) - marginal_terms(terms)
+            ...                               # fold, pure jnp
+        def objective(self, rel, state, l): ...
+
+Interop
+-------
+
+``repro.interop.sklearn`` adapts the selector to scikit-learn's
+composition machinery (soft dependency — the import tells you to
+install sklearn if missing)::
+
+    from repro.interop.sklearn import MRMRTransformer
+    from sklearn.pipeline import make_pipeline
+
+    pipe = make_pipeline(
+        MRMRTransformer(num_select=10, criterion="jmi", bins=32), clf
+    )
+    pipe.fit(X, y)          # SelectorMixin: get_support / transform
+    GridSearchCV(pipe, {"mrmrtransformer__num_select": [5, 10, 20]})
+
+Columnar data streams natively (soft-gated on pyarrow):
+:class:`~repro.data.sources.ParquetSource` decodes Parquet row batches
+block-by-block from the file's row groups (geometry from the footer, no
+data read before the first pass) and :class:`~repro.data.sources.
+ArrowSource` wraps an in-memory Arrow table; both compose with
+``bins=``, ``spill_dir=`` and the rest of the streaming stack.  (CLI:
+``python -m repro.launch.select --input data.parquet``.)
 
 Binning
 -------
@@ -206,9 +266,11 @@ Layers
 """
 
 from repro.core import (  # noqa: F401
+    CMIMCriterion,
     Criterion,
     CustomScore,
     FeatureSelector,
+    JMICriterion,
     MIDCriterion,
     MIQCriterion,
     MIScore,
@@ -226,12 +288,14 @@ from repro.core import (  # noqa: F401
     register_engine,
 )
 
-__version__ = "1.4.0"
+__version__ = "1.5.0"
 
 __all__ = [
+    "CMIMCriterion",
     "Criterion",
     "CustomScore",
     "FeatureSelector",
+    "JMICriterion",
     "MIDCriterion",
     "MIQCriterion",
     "MIScore",

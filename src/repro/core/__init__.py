@@ -2,11 +2,15 @@
 # The front door is MRMRSelector (repro.core.selector); the driver
 # functions remain public for benchmarks and direct engine access.
 from repro.core.criteria import (  # noqa: F401
+    CMIMCriterion,
     Criterion,
+    JMICriterion,
     MIDCriterion,
     MIQCriterion,
     MaxRelCriterion,
     available_criteria,
+    conditional_terms,
+    marginal_terms,
     register_criterion,
     resolve_criterion,
 )
@@ -25,6 +29,7 @@ from repro.core.scores import (  # noqa: F401
     MIScore,
     PearsonMIScore,
     ScoreFn,
+    cmi_from_counts,
     cor2mi,
     entropy_from_counts,
     mi_from_counts,

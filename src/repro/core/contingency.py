@@ -22,6 +22,11 @@ import jax.numpy as jnp
 
 Array = jax.Array
 
+# Out-of-range sentinel for fused targets: one-hots to an all-zero row, so
+# invalid (padded / masked) observations vanish from the counts.  Plain int,
+# not a jnp constant (import-time jnp would initialise the XLA backend).
+_OOR = 2**31 - 1
+
 
 def _onehot(x: Array, depth: int, dtype=jnp.float32) -> Array:
     """One-hot along a new trailing axis. Out-of-range values map to zeros."""
@@ -95,6 +100,62 @@ def counts_with_column(
 ) -> Array:
     """Tables of every column of X against one feature column (both < v)."""
     return batched_counts(X, xj, v, v, block=block, dtype=dtype)
+
+
+# ---------------------------------------------------------------------------
+# class-conditioned pair counts (JMI / CMIM redundancy statistics)
+# ---------------------------------------------------------------------------
+
+def fuse_targets(other: Array, cls: Array, vy: int, num_classes: int) -> Array:
+    """Fuse a target column with the class column into one code.
+
+    ``code = other * num_classes + cls`` lands in ``[0, vy * num_classes)``
+    exactly when both inputs are in range; any out-of-range input (padding
+    sentinels, negatives) maps to the out-of-range sentinel, so fused
+    padding vanishes from one-hot counts just like unfused padding.  The
+    guard also prevents int32 wraparound of ``sentinel * num_classes``
+    from aliasing back into the valid code range.
+    """
+    o = other.astype(jnp.int32)
+    c = cls.astype(jnp.int32)
+    ok = (o >= 0) & (o < vy) & (c >= 0) & (c < num_classes)
+    return jnp.where(ok, o * num_classes + c, jnp.int32(_OOR))
+
+
+def conditional_counts(
+    X: Array,
+    xj: Array,
+    y: Array,
+    vx: int,
+    vy: int,
+    num_classes: int,
+    *,
+    block: int = 64,
+    dtype=jnp.float32,
+    onehot_dtype=jnp.bfloat16,
+) -> Array:
+    """3-way counts of every column of ``X`` against ``(xj, y)`` jointly.
+
+    The class axis rides *fused into the target*: ``counts[f, v, w, c]``
+    is computed as an ordinary pair count of ``X`` against the code
+    ``xj * num_classes + y`` with ``vy * num_classes`` target values, then
+    unflattened — so the blocked one-hot einsum (and the Pallas tiling
+    that mirrors it) is reused unchanged, no 3-way kernel needed.
+
+    Args:
+      X: (M, F) int — feature matrix, values in [0, vx).
+      xj: (M,) int — the pair target column, values in [0, vy).
+      y: (M,) int — class labels in [0, num_classes).
+    Returns:
+      (F, vx, vy, num_classes) counts: ``sum(-1)`` is the marginal pair
+      table, each ``[..., c]`` slice the within-class pair table.
+    """
+    fused = fuse_targets(xj, y, vy, num_classes)
+    cnt = batched_counts(
+        X, fused, vx, vy * num_classes,
+        block=block, dtype=dtype, onehot_dtype=onehot_dtype,
+    )
+    return cnt.reshape(cnt.shape[0], vx, vy, num_classes)
 
 
 @functools.partial(jax.jit, static_argnames=("vx", "vy"))

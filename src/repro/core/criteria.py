@@ -16,8 +16,16 @@ pure-jnp hooks:
     candidates: a pytree of ``(n,)``-leading arrays (or empty), carried
     through ``lax.fori_loop`` by the compiled engines and across passes
     by the streaming engine.
-  * ``update(state, red_terms, l)`` — fold the ``(n,)`` redundancy terms
-    of the ``l``-th selected feature (0-based) into the state.
+  * ``update(state, terms, l)`` — fold the redundancy terms of the
+    ``l``-th selected feature (0-based) into the state.  ``terms`` is the
+    generic redundancy form ``{"marginal": (n,), "conditional": (n,) |
+    None}`` (what :meth:`repro.core.scores.ScoreFn.redundancy_terms`
+    returns): the pairwise statistic ``f(x_k; x_j)`` of every candidate
+    against the selection, and — for criteria that declare
+    ``needs_conditional_redundancy`` — the same statistic conditioned on
+    the class, ``f(x_k; x_j | y)``.  Use :func:`marginal_terms` /
+    :func:`conditional_terms` to unpack (both also accept a bare array
+    for hand-rolled folds and older custom criteria).
   * ``objective(rel, state, l)`` — ``(n,)`` per-candidate objective given
     the relevance vector and a state holding ``l`` folded selections.
     The engines mask and argmax this; the distributed argmax/psum
@@ -28,7 +36,12 @@ from the host-driven pass loop (streaming), so a criterion written once
 runs on every engine × regime combination.  ``needs_redundancy = False``
 (max-relevance) lets engines skip redundancy scoring entirely — the
 streaming engine then runs ONE pass of I/O over the source instead of
-``num_select`` passes.
+``num_select`` passes.  ``needs_conditional_redundancy = True`` (JMI,
+CMIM) makes every engine compute class-conditioned pair statistics —
+3-way ``(candidate value, pair value, class)`` counts — alongside the
+marginal ones; criteria that leave it ``False`` pay nothing: no class
+axis is materialised and the streaming statistics state keeps its
+marginal shape and bytes.
 
 Register your own with :func:`register_criterion`::
 
@@ -38,8 +51,8 @@ Register your own with :func:`register_criterion`::
         name = "mid2x"
         def init_state(self, n):
             return dict(red_sum=jnp.zeros((n,), jnp.float32))
-        def update(self, state, red_terms, l):
-            return dict(red_sum=state["red_sum"] + red_terms)
+        def update(self, state, terms, l):
+            return dict(red_sum=state["red_sum"] + marginal_terms(terms))
         def objective(self, rel, state, l):
             denom = jnp.maximum(l, 1).astype(jnp.float32)
             return rel - 2.0 * state["red_sum"] / denom
@@ -75,6 +88,34 @@ Array = jax.Array
 _QUOTIENT_EPS = 1e-4
 
 
+def marginal_terms(terms) -> Array:
+    """The ``(n,)`` marginal redundancy vector from a terms dict.
+
+    Also accepts a bare array (hand-rolled folds, pre-terms custom
+    criteria), so ``update`` implementations written either way work.
+    """
+    if isinstance(terms, dict):
+        return terms["marginal"]
+    return terms
+
+
+def conditional_terms(terms) -> Array:
+    """The ``(n,)`` class-conditioned redundancy vector from a terms dict.
+
+    Only present when the criterion declares
+    ``needs_conditional_redundancy = True`` (the engines then compute
+    3-way counts); anything else fails loudly instead of folding garbage.
+    """
+    if isinstance(terms, dict) and terms.get("conditional") is not None:
+        return terms["conditional"]
+    raise ValueError(
+        "redundancy terms carry no conditional component; a criterion "
+        "reading conditional_terms(...) must declare "
+        "needs_conditional_redundancy = True so the engines compute "
+        "class-conditioned pair statistics"
+    )
+
+
 class Criterion:
     """A greedy selection objective as a jit-safe pure-jnp fold.
 
@@ -83,17 +124,24 @@ class Criterion:
     ``needs_redundancy = False`` declares that ``objective`` never reads
     the fold state; engines then skip redundancy scoring entirely
     (streaming: one I/O pass instead of ``num_select``).
+    ``needs_conditional_redundancy = True`` makes the engines deliver
+    class-conditioned pair statistics in ``terms["conditional"]`` (the
+    score must support them — :class:`~repro.core.scores.MIScore` does);
+    leaving it ``False`` keeps the marginal-only fast path: no class
+    axis, no extra statistics memory or I/O.
     """
 
     name: str = ""
     needs_redundancy: bool = True
+    needs_conditional_redundancy: bool = False
 
     def init_state(self, n: int):
         """Zeroed fold state for ``n`` candidate features (a pytree)."""
         raise NotImplementedError
 
-    def update(self, state, red_terms: Array, l):
-        """Fold the ``(n,)`` redundancy terms of selection ``l`` (0-based)."""
+    def update(self, state, terms, l):
+        """Fold selection ``l``'s redundancy ``terms`` (0-based; see
+        :func:`marginal_terms` / :func:`conditional_terms`)."""
         raise NotImplementedError
 
     def objective(self, rel: Array, state, l) -> Array:
@@ -166,8 +214,8 @@ class MIDCriterion(Criterion):
     def init_state(self, n: int):
         return dict(red_sum=jnp.zeros((n,), jnp.float32))
 
-    def update(self, state, red_terms: Array, l):
-        return dict(red_sum=state["red_sum"] + red_terms)
+    def update(self, state, terms, l):
+        return dict(red_sum=state["red_sum"] + marginal_terms(terms))
 
     def objective(self, rel: Array, state, l) -> Array:
         denom = jnp.maximum(l, 1).astype(jnp.float32)
@@ -192,8 +240,8 @@ class MIQCriterion(Criterion):
     def init_state(self, n: int):
         return dict(red_sum=jnp.zeros((n,), jnp.float32))
 
-    def update(self, state, red_terms: Array, l):
-        return dict(red_sum=state["red_sum"] + red_terms)
+    def update(self, state, terms, l):
+        return dict(red_sum=state["red_sum"] + marginal_terms(terms))
 
     def objective(self, rel: Array, state, l) -> Array:
         denom = jnp.maximum(l, 1).astype(jnp.float32)
@@ -218,19 +266,85 @@ class MaxRelCriterion(Criterion):
     def init_state(self, n: int):
         return {}
 
-    def update(self, state, red_terms: Array, l):
+    def update(self, state, terms, l):
         return state
 
     def objective(self, rel: Array, state, l) -> Array:
         return rel
 
 
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class JMICriterion(Criterion):
+    """Joint mutual information (Yang & Moody; Brown et al.'s unified form).
+
+    ``g_k = rel_k + mean_j [I(x_k; x_j | y) - I(x_k; x_j)]``: the
+    class-conditioned pair term REWARDS candidates whose dependence on the
+    selected set is informative about the class (complementarity), while
+    the marginal term penalises plain redundancy — mRMR's penalty with the
+    sign-corrected conditional completing the ITFS generic form.  The fold
+    is a running sum of the per-selection gap, so streaming folds it
+    incrementally exactly like ``mid`` folds ``red_sum``.
+    """
+
+    name = "jmi"
+    needs_conditional_redundancy = True
+
+    def init_state(self, n: int):
+        return dict(gap_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, terms, l):
+        gap = conditional_terms(terms) - marginal_terms(terms)
+        return dict(gap_sum=state["gap_sum"] + gap)
+
+    def objective(self, rel: Array, state, l) -> Array:
+        denom = jnp.maximum(l, 1).astype(jnp.float32)
+        return rel + state["gap_sum"] / denom
+
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class CMIMCriterion(Criterion):
+    """Conditional mutual information maximisation (Fleuret 2004).
+
+    ``g_k = min_j I(x_k; y | x_j)`` over the selected set — pick the
+    candidate whose WORST-case usefulness given any single already-selected
+    feature is best (max of min).  By the chain rule ``I(x_k; y | x_j) =
+    rel_k + I(x_k; x_j | y) - I(x_k; x_j)``, so the fold is a running
+    *min* of the per-selection gap (the registry's min-fold, exercised by
+    no other built-in): state starts at ``+inf``, and with an empty
+    selected set the objective is pure relevance.  Ties argmax toward the
+    smallest feature id like every engine.
+    """
+
+    name = "cmim"
+    needs_conditional_redundancy = True
+
+    def init_state(self, n: int):
+        # +inf identity of the min-fold; objective guards l == 0, so the
+        # infinity never reaches a reported gain.
+        return dict(worst_gap=jnp.full((n,), jnp.inf, jnp.float32))
+
+    def update(self, state, terms, l):
+        gap = conditional_terms(terms) - marginal_terms(terms)
+        return dict(worst_gap=jnp.minimum(state["worst_gap"], gap))
+
+    def objective(self, rel: Array, state, l) -> Array:
+        # rel + inf stays inf (never NaN: rel is finite MI), so the where
+        # cleanly selects pure relevance for the first pick.
+        return jnp.where(jnp.asarray(l) == 0, rel, rel + state["worst_gap"])
+
+
 __all__ = [
+    "CMIMCriterion",
     "Criterion",
+    "JMICriterion",
     "MIDCriterion",
     "MIQCriterion",
     "MaxRelCriterion",
     "available_criteria",
+    "conditional_terms",
+    "marginal_terms",
     "register_criterion",
     "resolve_criterion",
 ]

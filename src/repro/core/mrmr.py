@@ -48,7 +48,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import contingency
 from repro.core.criteria import Criterion, resolve_criterion
-from repro.core.scores import CustomScore, MIScore, ScoreFn, mi_from_counts
+from repro.core.scores import (
+    CustomScore,
+    MIScore,
+    ScoreFn,
+    cmi_from_counts,
+    mi_from_counts,
+)
 from repro.dist import compat
 from repro.dist.sharding import axes_tuple as _axes_tuple
 
@@ -270,6 +276,21 @@ def _nan_relevance(n: int) -> Array:
     return jnp.full((n,), jnp.nan, jnp.float32)
 
 
+def check_conditional_support(score: ScoreFn, crit: Criterion) -> None:
+    """Conditional criteria (JMI/CMIM) need a score whose pair statistic
+    decomposes per class; fail at build time with the fix, not with an
+    opaque error from inside a traced engine body."""
+    if crit.needs_conditional_redundancy and not getattr(
+        score, "supports_conditional", False
+    ):
+        raise ValueError(
+            f"criterion {crit.name!r} needs class-conditioned pair "
+            f"statistics I(x_k; x_j | y), but {type(score).__name__} has "
+            "no conditional decomposition; score with MIScore (pass "
+            "bins= to discretise continuous data first)"
+        )
+
+
 # ---------------------------------------------------------------------------
 # single-device reference driver (feature-major), any score fn
 # ---------------------------------------------------------------------------
@@ -286,10 +307,15 @@ def mrmr_reference(
     """Pure-jnp mRMR on one device. ``X_rows`` is feature-major (N, M)."""
     crit = resolve_criterion(criterion)
     _check_custom_criterion(score, crit)
+    check_conditional_support(score, crit)
     n, m = X_rows.shape
     custom = isinstance(score, CustomScore)
     use_incr = incremental and score.incremental_safe and not custom
     fold = crit.needs_redundancy and not custom
+    cond = fold and crit.needs_conditional_redundancy
+
+    def red_terms(row):
+        return score.redundancy_terms(X_rows, row, y, conditional=cond)
 
     rel = None if custom else score.relevance(X_rows, y)
     state = _loop_state(n, num_select)
@@ -309,9 +335,7 @@ def mrmr_reference(
             g = crit.objective(rel, st["crit"], l)
         else:
             def inner(j, cs):
-                return crit.update(
-                    cs, score.redundancy(X_rows, st["sel_rows"][j]), j
-                )
+                return crit.update(cs, red_terms(st["sel_rows"][j]), j)
 
             cs = lax.fori_loop(0, l, inner, crit.init_state(n))
             g = crit.objective(rel, cs, l)
@@ -326,7 +350,7 @@ def mrmr_reference(
             st["sel_rows"], xk[None].astype(sel_dtype), (l, 0)
         )
         if use_incr and fold:
-            st["crit"] = crit.update(st["crit"], score.redundancy(X_rows, xk), l)
+            st["crit"] = crit.update(st["crit"], red_terms(xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
@@ -367,6 +391,25 @@ def _conventional_body(
         )
         return lax.psum(cnt, obs_axes) if obs_axes else cnt
 
+    def pair_terms(tgt_loc: Array) -> dict:
+        """The criterion's redundancy terms for one selected column.
+
+        Marginal-only criteria keep the exact pre-conditional graph (a
+        (N, v, v) count + MI — bitwise-identical selections, no class
+        axis).  Conditional criteria fuse the class into the target, so
+        ONE psummed (N, v, v*c) count yields both terms.
+        """
+        if not crit.needs_conditional_redundancy:
+            return dict(
+                marginal=mi_from_counts(counts_vs(tgt_loc, v)), conditional=None
+            )
+        fused = contingency.fuse_targets(tgt_loc, y_loc, v, c)
+        cnt = counts_vs(fused, v * c).reshape(n, v, v, c)
+        return dict(
+            marginal=mi_from_counts(cnt.sum(-1)),
+            conditional=cmi_from_counts(cnt),
+        )
+
     rel = mi_from_counts(counts_vs(y_loc, c))  # (N,) replicated
     state = _loop_state(n, num_select)
     if incremental and crit.needs_redundancy:
@@ -384,8 +427,7 @@ def _conventional_body(
             # dry-run HLO carries the recompute cost explicitly.
             def inner(j, cs):
                 xj = jnp.take(X_loc, st["selected"][j], axis=1)
-                mi = mi_from_counts(counts_vs(xj, v))
-                folded = crit.update(cs, mi, j)
+                folded = crit.update(cs, pair_terms(xj), j)
                 if static_inner:
                     # Fold unconditionally (the dry-run carries the cost),
                     # keep the state only for the real j < l iterations.
@@ -405,7 +447,7 @@ def _conventional_body(
         st["gains"] = st["gains"].at[l].set(g[k])
         if incremental and crit.needs_redundancy:
             xk = jnp.take(X_loc, k, axis=1)
-            st["crit"] = crit.update(st["crit"], mi_from_counts(counts_vs(xk, v)), l)
+            st["crit"] = crit.update(st["crit"], pair_terms(xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
@@ -510,6 +552,12 @@ def _alternative_body(
     custom = isinstance(score, CustomScore)
     use_incr = incremental and score.incremental_safe and not custom
     fold = crit.needs_redundancy and not custom
+    cond = fold and crit.needs_conditional_redundancy
+
+    def red_terms(row):
+        # y is replicated (the paper's broadcast v_class), so the
+        # class-conditioned pair statistic stays a map-only local job.
+        return score.redundancy_terms(X_loc, row, y, conditional=cond)
 
     rel = None if custom else score.relevance(X_loc, y)
     state = _loop_state(n_loc, num_select)
@@ -536,9 +584,7 @@ def _alternative_body(
             g = crit.objective(rel, st["crit"], l)
         else:
             def inner(j, cs):
-                return crit.update(
-                    cs, score.redundancy(X_loc, st["sel_rows"][j]), j
-                )
+                return crit.update(cs, red_terms(st["sel_rows"][j]), j)
 
             cs0 = _pvary(crit.init_state(n_loc), feat_axes)
             cs = lax.fori_loop(0, l, inner, cs0)
@@ -552,7 +598,7 @@ def _alternative_body(
         st["gains"] = st["gains"].at[l].set(best)
         st["sel_rows"] = lax.dynamic_update_slice(st["sel_rows"], xk[None], (l, 0))
         if use_incr and fold:
-            st["crit"] = crit.update(st["crit"], score.redundancy(X_loc, xk), l)
+            st["crit"] = crit.update(st["crit"], red_terms(xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)
@@ -599,6 +645,7 @@ def make_alternative_fn(
     extent (callers slice ``[:n_features]``)."""
     crit = resolve_criterion(criterion)
     _check_custom_criterion(score, crit)
+    check_conditional_support(score, crit)
     kwargs = dict(
         num_select=num_select,
         n_features=int(n_features),
@@ -658,6 +705,21 @@ def _grid_body(
         cnt = contingency.batched_counts(X_loc, tgt_loc, v, vy, block=block)
         return lax.psum(cnt, obs_axes) if obs_axes else cnt
 
+    def pair_terms(tgt_loc: Array) -> dict:
+        """Redundancy terms for one fetched column — the class fuses into
+        the target locally (y_loc is this tile's row slice), so the 3-way
+        counts ride the same single psum as the marginal counts."""
+        if not crit.needs_conditional_redundancy:
+            return dict(
+                marginal=mi_from_counts(counts_vs(tgt_loc, v)), conditional=None
+            )
+        fused = contingency.fuse_targets(tgt_loc, y_loc, v, c)
+        cnt = counts_vs(fused, v * c).reshape(n_loc, v, v, c)
+        return dict(
+            marginal=mi_from_counts(cnt.sum(-1)),
+            conditional=cmi_from_counts(cnt),
+        )
+
     def fetch_col(k):
         """Local rows of global column k, replicated across feature axes."""
         k_loc = k - shard * n_loc
@@ -681,7 +743,7 @@ def _grid_body(
         else:
             def inner(j, cs):
                 xj = fetch_col(st["selected"][j])
-                return crit.update(cs, mi_from_counts(counts_vs(xj, v)), j)
+                return crit.update(cs, pair_terms(xj), j)
 
             cs0 = _pvary(crit.init_state(n_loc), feat_axes)
             cs = lax.fori_loop(0, l, inner, cs0)
@@ -694,7 +756,7 @@ def _grid_body(
         st["gains"] = st["gains"].at[l].set(best)
         if incremental and crit.needs_redundancy:
             xk = fetch_col(k)
-            st["crit"] = crit.update(st["crit"], mi_from_counts(counts_vs(xk, v)), l)
+            st["crit"] = crit.update(st["crit"], pair_terms(xk), l)
         return st
 
     state = lax.fori_loop(0, num_select, body, state)

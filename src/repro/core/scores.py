@@ -55,6 +55,26 @@ def mi_from_counts(counts: Array) -> Array:
     return terms.sum(axis=(-1, -2))
 
 
+def cmi_from_counts(counts: Array) -> Array:
+    """Conditional mutual information (nats) from 3-way count tables.
+
+    ``I(x; w | y) = sum_c p(y=c) * I(x; w | y=c)``: per-class MI of each
+    class slice, weighted by the empirical class mass.  Empty class slices
+    contribute zero (their MI is zero and their weight is zero).
+
+    Args:
+      counts: (..., V, W, C) non-negative counts — the layout
+        :func:`repro.core.contingency.conditional_counts` produces.
+    Returns:
+      (...,) conditional MI in nats.
+    """
+    counts = counts.astype(jnp.float32)
+    per_class = mi_from_counts(jnp.moveaxis(counts, -1, -3))  # (..., C)
+    cls_mass = counts.sum(axis=(-3, -2))  # (..., C)
+    total = jnp.maximum(cls_mass.sum(axis=-1, keepdims=True), 1.0)
+    return (per_class * cls_mass / total).sum(axis=-1)
+
+
 def entropy_from_counts(counts: Array) -> Array:
     """Shannon entropy (nats) of a histogram (..., K)."""
     counts = counts.astype(jnp.float32)
@@ -124,12 +144,38 @@ class ScoreFn:
 
     incremental_safe: bool = True
     supports_streaming: bool = False
+    # Scores whose pair statistic decomposes per class (MI from counts)
+    # set this and override redundancy_terms with conditional=True support;
+    # conditional criteria (JMI/CMIM) require it.
+    supports_conditional: bool = False
 
     def relevance(self, cands: Array, cls: Array) -> Array:  # (F, M),(M,)->(F,)
         raise NotImplementedError
 
     def redundancy(self, cands: Array, other: Array) -> Array:  # ->(F,)
         raise NotImplementedError
+
+    def redundancy_terms(
+        self, cands: Array, other: Array, cls: Array | None = None,
+        *, conditional: bool = False,
+    ) -> dict:
+        """The generic redundancy form the criterion fold consumes.
+
+        Returns ``{"marginal": (F,), "conditional": (F,) | None}`` — the
+        pairwise score of every candidate against ``other``, and (when
+        ``conditional=True``) the same statistic conditioned on the class
+        column ``cls``.  The base implementation serves marginal-only
+        criteria for any score; conditional support is opt-in
+        (``supports_conditional``).
+        """
+        if conditional:
+            raise ValueError(
+                f"{type(self).__name__} has no class-conditioned pair "
+                "statistic (supports_conditional=False); conditional "
+                "criteria like JMI/CMIM need MIScore (pass bins= to "
+                "discretise continuous data)"
+            )
+        return dict(marginal=self.redundancy(cands, other), conditional=None)
 
     # -- streaming sufficient statistics --------------------------------
 
@@ -176,6 +222,7 @@ class MIScore(ScoreFn):
     use_pallas: Union[bool, Literal["auto"]] = "auto"
 
     supports_streaming = True
+    supports_conditional = True
 
     def __post_init__(self):
         if self.use_pallas not in (True, False, "auto"):
@@ -206,6 +253,43 @@ class MIScore(ScoreFn):
     def redundancy(self, cands: Array, other: Array) -> Array:
         return mi_from_counts(self._counts(cands, other, self.num_values))
 
+    # -- class-conditioned pair statistics (JMI / CMIM) -------------------
+
+    def _cond_tables(self, X_cols: Array, xj: Array, cls: Array) -> Array:
+        """(M, F) columns -> (F, V, V, C) class-conditioned pair tables."""
+        if self.use_pallas is False:
+            return contingency.conditional_counts(
+                X_cols, xj, cls, self.num_values, self.num_values,
+                self.num_classes, block=self.block,
+            )
+        from repro.kernels import ops  # lazy: avoids core<->kernels cycle
+
+        return ops.conditional_tables(
+            X_cols, xj, cls, self.num_values, self.num_classes,
+            use_pallas=self.use_pallas,
+        )
+
+    def redundancy_conditional(
+        self, cands: Array, other: Array, cls: Array
+    ) -> Array:
+        """Per-candidate ``I(x_k; other | cls)`` (feature-major cands)."""
+        return cmi_from_counts(self._cond_tables(cands.T, other, cls))
+
+    def redundancy_terms(
+        self, cands: Array, other: Array, cls: Array | None = None,
+        *, conditional: bool = False,
+    ) -> dict:
+        if not conditional:
+            return dict(marginal=self.redundancy(cands, other), conditional=None)
+        # One 3-way count per pass yields BOTH terms: the marginal table is
+        # the class-sum, so a conditional criterion pays one counting
+        # sweep, not two.
+        counts = self._cond_tables(cands.T, other, cls)
+        return dict(
+            marginal=mi_from_counts(counts.sum(-1)),
+            conditional=cmi_from_counts(counts),
+        )
+
     # -- streaming: per-pair contingency tables, summed block-by-block ----
 
     def init_state(self, n_features: int, target_kind: str = "class") -> Array:
@@ -213,7 +297,16 @@ class MIScore(ScoreFn):
         # counts < 2^24), but a float running sum would silently saturate
         # past 2^24 rows per cell — the very regime streaming exists for.
         # int32 is exact to ~2.1B observations per cell.
-        vy = self.num_classes if target_kind == "class" else self.num_values
+        # "feature_cond" carries the class axis FUSED into the target slot
+        # (accumulate sizes the one-hot by state.shape[-1], so the same
+        # compiled step serves all three kinds); finalize_conditional
+        # unflattens it.  Only conditional criteria ever allocate it —
+        # mid/miq state shapes and bytes are untouched.
+        vy = {
+            "class": self.num_classes,
+            "feature": self.num_values,
+            "feature_cond": self.num_values * self.num_classes,
+        }[target_kind]
         return jnp.zeros((n_features, self.num_values, vy), jnp.int32)
 
     def accumulate(
@@ -229,6 +322,21 @@ class MIScore(ScoreFn):
 
     def finalize(self, state: Array) -> Array:
         return mi_from_counts(state)
+
+    def finalize_conditional(self, state: Array) -> dict:
+        """Reduce a ``"feature_cond"`` state to both redundancy terms.
+
+        The fused target axis unflattens to (pair value, class); the
+        marginal table is its class-sum — identical counts to an unfused
+        redundancy pass, so marginal-only selections are unaffected by
+        where the terms came from.
+        """
+        n, v, vc = state.shape
+        counts = state.reshape(n, v, vc // self.num_classes, self.num_classes)
+        return dict(
+            marginal=mi_from_counts(counts.sum(-1)),
+            conditional=cmi_from_counts(counts),
+        )
 
 
 @dataclasses.dataclass(frozen=True)

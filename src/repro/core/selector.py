@@ -495,9 +495,12 @@ class MRMRSelector:
         MI with inferred cardinalities, continuous -> Pearson-MI).
       criterion: the greedy objective — a registered name (``"mid"`` the
         paper's difference form, ``"miq"`` quotient, ``"maxrel"``
-        relevance-only) or a :class:`~repro.core.criteria.Criterion`
+        relevance-only, ``"jmi"``/``"cmim"`` the class-conditioned
+        objectives) or a :class:`~repro.core.criteria.Criterion`
         instance.  Orthogonal to ``encoding``: any criterion runs on any
-        engine, in-memory or streaming.
+        engine, in-memory or streaming.  Conditional criteria need a
+        score with a class-conditioned decomposition (``MIScore``; pass
+        ``bins=`` to discretise continuous data first).
       encoding: "auto" (paper §III rule via ``plan_selection``) or one of
         ``available_encodings()``.
       mesh: an existing device mesh to run on; None lets the planner build
@@ -850,6 +853,11 @@ class MRMRSelector:
                 # Explicit MI on float blocks would silently truncate to
                 # int32 inside the one-hot encode — fail actionably here.
                 raise self._continuous_mi_error("the source")
+        # Conditional criteria (jmi/cmim) need a score with a class-
+        # conditioned decomposition — fail before the first I/O pass.
+        mrmr_mod.check_conditional_support(
+            score, resolve_criterion(self.criterion)
+        )
         plan = self._resolve_stream_plan(source, score)
         if isinstance(source, BinnedSource):
             plan = dataclasses.replace(plan, bins=source.bins)
@@ -916,6 +924,11 @@ class MRMRSelector:
         # Discrete MI scores need integral class labels; every other score
         # (Pearson, custom) keeps continuous targets intact.
         y = y.astype(jnp.int32 if isinstance(score, MIScore) else jnp.float32)
+        # Conditional criteria (jmi/cmim) need a score with a class-
+        # conditioned decomposition — fail before planning/compiling.
+        mrmr_mod.check_conditional_support(
+            score, resolve_criterion(self.criterion)
+        )
         plan = self._resolve_plan(X.shape, score)
         if plan.score is None:
             plan = dataclasses.replace(plan, score=score)

@@ -18,10 +18,16 @@ the running-fold formulation — selections identical to the paper's
 recompute, as with the in-memory engines) while peak device memory is
 ``O(block_obs × N)`` for the block plus the statistics state,
 independent of ``num_obs``.  The greedy objective is pluggable
-(``criterion=`` — ``mid``/``miq``/``maxrel`` or anything registered via
+(``criterion=`` — ``mid``/``miq``/``maxrel``/``jmi``/``cmim`` or
+anything registered via
 :func:`repro.core.criteria.register_criterion`); a criterion that
 declares ``needs_redundancy = False`` (``maxrel``) collapses the whole
-fit to ONE relevance pass of I/O.
+fit to ONE relevance pass of I/O, while one that declares
+``needs_conditional_redundancy = True`` (``jmi``/``cmim``) widens each
+redundancy pass's target one-hot by the class axis (host-fused codes,
+``"feature_cond"`` statistics state) so the SAME sweep yields both
+``I(x_k; x_j)`` and ``I(x_k; x_j | y)`` — no extra pass, and zero extra
+state bytes for criteria that never ask (asserted via ``io["state_bytes"]``).
 
 At production scale that ``L``-pass tax is the wall-clock story, so the
 engine carries three composable knobs that attack pass count and
@@ -91,7 +97,7 @@ from jax.sharding import Mesh
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.criteria import Criterion, resolve_criterion
-from repro.core.mrmr import MRMRResult, WarmJitCache
+from repro.core.mrmr import MRMRResult, WarmJitCache, check_conditional_support
 from repro.core.scores import MIScore, ScoreFn
 from repro.core.selector import check_num_select, register_engine
 from repro.data.binning import BinnedSource, _as_class_labels
@@ -206,35 +212,54 @@ def _extract_target(
     y_blk: np.ndarray,
     target_cols,
     binner,
+    cond_classes: int | None = None,
 ):
     """The pass target from one raw host block: the class (``None``), one
     feature column (int -> ``(B,)``) or a batch of candidate columns
     (sequence -> ``(q, B)``).  With a ``binner`` the block is raw float32
     and each target column encodes through the same f32 ``searchsorted``
-    the device kernel runs, so host and device codes agree bitwise."""
-    if binner is not None:
-        if target_cols is None:
-            return _as_class_labels(y_blk)
-        if np.ndim(target_cols) == 0:
-            c = int(target_cols)
-            return binner.encode_column(c, X_blk[:, c])
-        return np.stack(
-            [binner.encode_column(int(c), X_blk[:, int(c)]) for c in target_cols]
-        )
+    the device kernel runs, so host and device codes agree bitwise.
+
+    ``cond_classes`` marks a class-conditioned redundancy pass (JMI/CMIM):
+    each extracted column fuses with the class labels into one code
+    ``col * cond_classes + label`` — the host-side twin of
+    :func:`repro.core.contingency.fuse_targets`, feeding the same
+    accumulate with a ``num_values * cond_classes``-wide one-hot."""
     if target_cols is None:
-        return y_blk
+        return _as_class_labels(y_blk) if binner is not None else y_blk
+    labels = None
+    if cond_classes is not None:
+        labels = (
+            _as_class_labels(y_blk) if binner is not None else y_blk
+        ).astype(np.int64)
+
+    def column(c):
+        c = int(c)
+        col = (
+            binner.encode_column(c, X_blk[:, c])
+            if binner is not None
+            else X_blk[:, c]
+        )
+        if labels is None:
+            return col
+        return (col.astype(np.int64) * cond_classes + labels).astype(np.int32)
+
     if np.ndim(target_cols) == 0:
-        return X_blk[:, int(target_cols)]
-    return np.ascontiguousarray(X_blk[:, list(map(int, target_cols))].T)
+        return column(target_cols)
+    cols = [column(c) for c in target_cols]
+    return np.ascontiguousarray(np.stack(cols))
 
 
 class _PassIO:
-    """Per-fit I/O ledger: every pass/block/byte the engine consumes."""
+    """Per-fit I/O ledger: every pass/block/byte the engine consumes,
+    plus the peak statistics-state footprint (``state_bytes`` — how the
+    conditional-criterion memory tax is asserted, not eyeballed)."""
 
     def __init__(self):
         self.passes = 0
         self.blocks_read = 0
         self.bytes_read = 0
+        self.state_bytes = 0
 
     def count(self, raw_blocks):
         for X_blk, y_blk in raw_blocks:
@@ -242,11 +267,16 @@ class _PassIO:
             self.bytes_read += X_blk.nbytes + y_blk.nbytes
             yield X_blk, y_blk
 
+    def note_state(self, state):
+        size = sum(leaf.nbytes for leaf in jax.tree.leaves(state))
+        self.state_bytes = max(self.state_bytes, size)
+
     def as_dict(self) -> dict:
         return dict(
             passes=self.passes,
             blocks_read=self.blocks_read,
             bytes_read=self.bytes_read,
+            state_bytes=self.state_bytes,
         )
 
 
@@ -261,14 +291,24 @@ def _score_pass(
     io: _PassIO,
     binned: "BinnedSource | None" = None,
     batch: int | None = None,
+    conditional: bool = False,
 ):
     """One full map-reduce pass over ``raw_pass`` (an ``(X, y)`` raw host
     block iterator): ``(N,)`` scores of every feature against the class
     (``target_cols=None``) / one column (int), or ``(q, N)`` scores
-    against a batch of candidate columns (sequence of length ``q``)."""
+    against a batch of candidate columns (sequence of length ``q``).
+
+    ``conditional=True`` (JMI/CMIM redundancy passes) fuses the class into
+    the target codes and returns ``dict(marginal=..., conditional=...)``
+    arrays instead — both terms from the ONE counting sweep."""
     io.passes += 1
     binner = binned.binner if binned is not None else None
-    kind = "class" if target_cols is None else "feature"
+    cond = conditional and target_cols is not None
+    kind = (
+        "class"
+        if target_cols is None
+        else ("feature_cond" if cond else "feature")
+    )
     if batch is None:
         state = score.init_state(placer.padded_features, kind)
     else:
@@ -279,12 +319,16 @@ def _score_pass(
             score.init_state(placer.padded_features, kind),
         )
     state = placer.place_state(state)
+    io.note_state(state)
+    cond_classes = score.num_classes if cond else None
 
     def host_blocks():
         for X_blk, y_blk in io.count(raw_pass):
             if binner is not None:
                 X_blk = np.asarray(X_blk, np.float32)
-            yield X_blk, _extract_target(X_blk, y_blk, target_cols, binner)
+            yield X_blk, _extract_target(
+                X_blk, y_blk, target_cols, binner, cond_classes
+            )
 
     if prefetch > 0:
         placed = PrefetchPlacer(placer, depth=prefetch).stream(host_blocks())
@@ -292,11 +336,22 @@ def _score_pass(
         placed = (placer(X_blk, tgt) for X_blk, tgt in host_blocks())
     for triple in placed:
         state = acc_fn(state, *triple)
+    n = source.num_features  # drop feature-padding columns on every read
+    if cond:
+        fin = (
+            score.finalize_conditional
+            if batch is None
+            else jax.vmap(score.finalize_conditional)
+        )
+        terms = {k: np.asarray(v, np.float32) for k, v in fin(state).items()}
+        if batch is None:
+            return {k: v[:n] for k, v in terms.items()}
+        return {k: v[:, :n] for k, v in terms.items()}
     if batch is None:
         scores = np.asarray(score.finalize(state), np.float32)
-        return scores[: source.num_features]  # drop feature-padding columns
+        return scores[:n]
     scores = np.asarray(jax.vmap(score.finalize)(state), np.float32)
-    return scores[:, : source.num_features]
+    return scores[:, :n]
 
 
 def mrmr_streaming(
@@ -332,9 +387,12 @@ def mrmr_streaming(
         accumulation (0 = synchronous placement; ``"auto"`` resolves per
         backend, see :func:`~repro.dist.streaming.resolve_prefetch`).
       criterion: greedy objective — a name (``"mid"``/``"miq"``/
-        ``"maxrel"``) or :class:`~repro.core.criteria.Criterion`.  The
-        fold runs on the same (N,)-sized vectors the in-memory engines
-        fold, so selections agree engine-for-engine per criterion.
+        ``"maxrel"``/``"jmi"``/``"cmim"``) or
+        :class:`~repro.core.criteria.Criterion`.  The fold runs on the
+        same (N,)-sized vectors the in-memory engines fold, so
+        selections agree engine-for-engine per criterion.  Conditional
+        criteria (``jmi``/``cmim``) require an :class:`~repro.core.
+        scores.MIScore` (or any score with a conditional decomposition).
       batch_candidates: redundancy vectors speculated per pass (``q``).
         1 reproduces the classic one-pass-per-pick loop; ``q > 1`` cuts
         redundancy passes toward ``⌈(L-1)/q⌉`` at ``q×`` the statistics
@@ -355,6 +413,11 @@ def mrmr_streaming(
             "sufficient-statistics decomposition (init_state/accumulate/"
             "finalize). Materialise the data and use an in-memory engine."
         )
+    # JMI/CMIM need class-conditioned pair statistics; fail before any
+    # I/O if the score can't produce them.  Non-conditional criteria keep
+    # the exact pre-refactor pass shapes and state bytes.
+    check_conditional_support(score, crit)
+    needs_cond = crit.needs_redundancy and crit.needs_conditional_redundancy
     n = source.num_features
     check_num_select(num_select, n)
     prefetch = resolve_prefetch(prefetch)
@@ -442,6 +505,7 @@ def mrmr_streaming(
         return _score_pass(
             next_raw(), source, score, acc_fn if batch is None else acc_fn_q,
             placer, target_cols, prefetch, io, binned, batch,
+            conditional=needs_cond and target_cols is not None,
         )
 
     try:
@@ -489,9 +553,18 @@ def mrmr_streaming(
                     padded = cols + [cols[-1]] * (q - len(cols))
                     reds = run_pass(padded, batch=q)
                     for i, c in enumerate(cols):
-                        pending[c] = reds[i]
+                        pending[c] = (
+                            {k2: v[i] for k2, v in reds.items()}
+                            if isinstance(reds, dict)
+                            else reds[i]
+                        )
                     red = pending.pop(k)
-            cstate = crit.update(cstate, jnp.asarray(red), l)
+            terms = (
+                {k2: jnp.asarray(v) for k2, v in red.items()}
+                if isinstance(red, dict)
+                else jnp.asarray(red)
+            )
+            cstate = crit.update(cstate, terms, l)
     finally:
         if reader is not None:
             reader.close()

@@ -1,0 +1,14 @@
+"""Ecosystem adapters — this repo's engines behind other libraries' APIs.
+
+Submodules soft-gate their third-party imports so ``repro`` itself never
+grows a hard dependency: ``repro.interop.sklearn`` needs scikit-learn
+(:class:`~repro.interop.sklearn.MRMRTransformer`, a ``SelectorMixin``
+estimator that drops into ``Pipeline``/``GridSearchCV``), and the
+columnar sources it pairs with (``ParquetSource``/``ArrowSource`` in
+:mod:`repro.data.sources`) need pyarrow.  Importing a submodule without
+its dependency raises an actionable ``ImportError`` naming the package.
+"""
+
+from __future__ import annotations
+
+__all__ = ["sklearn"]

@@ -100,3 +100,32 @@ def contingency_tables_pallas(
     )(Xp, yp)
 
     return out.reshape(fp, num_values, num_classes)[:F]
+
+
+def conditional_tables_pallas(
+    X: Array,
+    xj: Array,
+    y: Array,
+    num_values: int,
+    num_classes: int,
+    *,
+    tile_m: int = 512,
+    tile_f: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """(M, F), (M,), (M,) -> (F, V, V, C) class-conditioned pair tables.
+
+    The class axis is fused into the pair target (``xj * C + y``, guarded
+    against out-of-range inputs) so the SAME tiled one-hot-matmul kernel
+    above produces the 3-way counts — the target one-hot just widens from
+    ``V`` to ``V * C`` lanes.  ``counts.sum(-1)`` recovers the marginal
+    pair table; each ``[..., c]`` slice is the within-class table.
+    """
+    from repro.core.contingency import fuse_targets  # shared fuse semantics
+
+    fused = fuse_targets(xj, y, num_values, num_classes)
+    out = contingency_tables_pallas(
+        X, fused, num_values, num_values * num_classes,
+        tile_m=tile_m, tile_f=tile_f, interpret=interpret,
+    )
+    return out.reshape(out.shape[0], num_values, num_values, num_classes)

@@ -20,7 +20,10 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.binning import bin_codes_pallas
-from repro.kernels.contingency import contingency_tables_pallas
+from repro.kernels.contingency import (
+    conditional_tables_pallas,
+    contingency_tables_pallas,
+)
 from repro.kernels.mi_score import mi_scores_pallas
 from repro.kernels.pearson import pearson_corr_pallas
 
@@ -53,6 +56,27 @@ def contingency_tables(
             X, y, num_values, num_classes, interpret=interp
         )
     return ref.contingency_tables(X, y, num_values, num_classes)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_values", "num_classes", "use_pallas")
+)
+def conditional_tables(
+    X: Array, xj: Array, y: Array, num_values: int, num_classes: int,
+    use_pallas="auto",
+) -> Array:
+    """(M, F), (M,), (M,) -> (F, V, V, C) class-conditioned pair tables.
+
+    The JMI/CMIM redundancy statistic: marginal pair counts split per
+    class, so one call yields both ``I(x_k; x_j)`` (class-summed) and
+    ``I(x_k; x_j | y)`` (class-weighted per-slice MI).
+    """
+    run, interp = _decide(use_pallas)
+    if run:
+        return conditional_tables_pallas(
+            X, xj, y, num_values, num_classes, interpret=interp
+        )
+    return ref.conditional_tables(X, xj, y, num_values, num_classes)
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas",))

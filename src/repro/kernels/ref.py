@@ -27,6 +27,20 @@ def contingency_tables(X: Array, y: Array, num_values: int, num_classes: int) ->
     )
 
 
+def conditional_tables(
+    X: Array, xj: Array, y: Array, num_values: int, num_classes: int
+) -> Array:
+    """(M, F), (M,), (M,) -> (F, V, V, C) class-conditioned pair tables.
+
+    ``counts[f, v, w, c]`` counts rows where ``X[:, f] == v``,
+    ``xj == w`` and ``y == c``; out-of-range entries contribute zero.
+    """
+    return _contingency.conditional_counts(
+        X, xj, y, num_values, num_values, num_classes,
+        block=max(1, min(64, X.shape[1])),
+    )
+
+
 def pearson_corr(X: Array, Y: Array) -> Array:
     """(F, M), (T, M) -> (F, T) Pearson correlation of rows."""
     return _scores.pearson_rows(X, Y)

@@ -16,6 +16,17 @@
     # any registered criterion runs on any engine, streamed or in-memory:
     PYTHONPATH=src python -m repro.launch.select --criterion miq
 
+    # Class-conditioned objectives: JMI and CMIM fold I(x_k; x_j | y)
+    # against the marginal redundancy — same pass count as mid, the
+    # redundancy sweep just carries a class axis:
+    PYTHONPATH=src python -m repro.launch.select --criterion jmi
+    PYTHONPATH=src python -m repro.launch.select --criterion cmim
+
+    # Parquet input (pyarrow): row batches decode block-by-block from the
+    # file's row groups; target = last column, dtypes from the schema:
+    PYTHONPATH=src python -m repro.launch.select \
+        --input data.parquet --select 10 --block-obs 65536
+
     # Wide regime: stream with feature-sharded statistics over 2 devices
     # (the per-pair statistics state splits across the model axis):
     PYTHONPATH=src REPRO_DEVICES=2 python -m repro.launch.select \
@@ -38,8 +49,9 @@
 Inputs: ``--input data.npz`` (arrays ``X`` rows=observations, ``y``) loads
 in-memory; ``--input data.npy`` (+ ``--target target.npy``) memmaps and
 streams block-by-block through the ``streaming`` engine; ``--input
-data.csv`` streams a CSV (target = last column); default is the paper's
-CorrAL-style synthetic generator.  The whole distribution strategy goes
+data.csv`` streams a CSV (target = last column); ``--input data.parquet``
+streams Parquet row batches (pyarrow; target = last column); default is
+the paper's CorrAL-style synthetic generator.  The whole distribution strategy goes
 through :class:`repro.MRMRSelector`: encoding ``auto`` applies the paper's
 §III aspect-ratio rule (streamed sources always run the streaming engine),
 explicit encodings shard over whatever devices jax exposes, and ``grid``
@@ -69,7 +81,7 @@ import time
 import jax
 import numpy as np
 
-from repro.core.criteria import available_criteria
+from repro.core.criteria import available_criteria, resolve_criterion
 from repro.core.scores import MIScore, PearsonMIScore
 from repro.core.selector import (
     MRMRSelector,
@@ -99,7 +111,18 @@ def _load_input(args):
         # plain MI expects pre-discretised integer categories.
         dtype = np.int32 if args.score == "mi" and not args.bins else np.float32
         return None, None, CSVSource(path, dtype=dtype)
-    raise SystemExit(f"unsupported --input {path!r} (.npz, .npy or .csv)")
+    if path.endswith(".parquet"):
+        from repro.data.sources import ParquetSource  # soft pyarrow gate
+
+        try:
+            # Block dtype comes from the file's schema (all-integral
+            # columns -> int32, else float32); target = last column.
+            return None, None, ParquetSource(path)
+        except ImportError as e:
+            raise SystemExit(str(e)) from None
+    raise SystemExit(
+        f"unsupported --input {path!r} (.npz, .npy, .csv or .parquet)"
+    )
 
 
 def main(argv=None) -> dict:
@@ -114,10 +137,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--encoding", default="auto",
                     choices=("auto",) + available_encodings())
     ap.add_argument("--criterion", default="mid",
-                    choices=available_criteria(),
                     help="greedy objective: mid (paper's difference form), "
                          "miq (quotient), maxrel (relevance only; streamed "
-                         "fits then need a single pass of I/O)")
+                         "fits then need a single pass of I/O), jmi / cmim "
+                         "(class-conditioned redundancy), or any name added "
+                         "via register_criterion")
     ap.add_argument("--mesh-obs", type=int, default=0,
                     help="observation-axis mesh extent (grid; 0 = auto)")
     ap.add_argument("--mesh-feat", type=int, default=0,
@@ -156,6 +180,19 @@ def main(argv=None) -> dict:
                     help="write the full MRMRResult (selected, gains, "
                          "relevance, provenance) as JSON to this path")
     args = ap.parse_args(argv)
+
+    # Validate the criterion name here — free-form (any registered name,
+    # including user plugins imported via sitecustomize) beats a frozen
+    # argparse choices list, but an unknown name should exit with the
+    # registry, not escape as a traceback out of fit().
+    try:
+        resolve_criterion(args.criterion)
+    except ValueError:
+        raise SystemExit(
+            f"--criterion {args.criterion!r} is not registered; "
+            f"available: {', '.join(available_criteria())} "
+            "(register_criterion adds more)"
+        ) from None
 
     X, y, source = _load_input(args)
 

@@ -4,13 +4,16 @@ equivalence (the api_redesign acceptance bar), and the selector read side.
 
 import dataclasses
 
+import jax
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
 from repro import (
+    CMIMCriterion,
     Criterion,
     CustomScore,
+    JMICriterion,
     MIDCriterion,
     MIQCriterion,
     MIScore,
@@ -20,9 +23,15 @@ from repro import (
     register_criterion,
 )
 from repro.core import mrmr_reference
-from repro.core.criteria import _CRITERIA, resolve_criterion
+from repro.core.criteria import (
+    _CRITERIA,
+    conditional_terms,
+    marginal_terms,
+    resolve_criterion,
+)
 from repro.core.mrmr import MRMRResult
 from repro.core.selector import check_num_select, register_engine
+from repro.data.sources import ArraySource
 from repro.data.synthetic import corral_dataset
 from repro.dist import make_mesh
 
@@ -89,7 +98,9 @@ class TestFoldSemantics:
 
 class TestRegistry:
     def test_builtins_registered(self):
-        assert {"mid", "miq", "maxrel"} <= set(available_criteria())
+        assert {"mid", "miq", "maxrel", "jmi", "cmim"} <= set(
+            available_criteria()
+        )
 
     def test_resolve(self):
         assert resolve_criterion("mid").name == "mid"
@@ -195,7 +206,7 @@ class TestMidReproducesLegacy:
 class TestCriterionEngineAgreement:
     """Every criterion selects identically on every engine."""
 
-    @pytest.mark.parametrize("criterion", ["miq", "maxrel"])
+    @pytest.mark.parametrize("criterion", ["miq", "maxrel", "jmi", "cmim"])
     def test_engines_agree(self, corral, criterion):
         X, y = corral
         ref = fit(X, y, "reference", criterion=criterion)
@@ -222,6 +233,285 @@ class TestCriterionEngineAgreement:
         mid = fit(X, y, "reference", criterion="mid")
         miq = fit(X, y, "reference", criterion="miq")
         assert mid.selected_.tolist() != miq.selected_.tolist()
+
+
+class TestConditionalFoldSemantics:
+    """JMI/CMIM folds compute exactly their documented formulas, and the
+    terms helpers accept both the dict form and bare arrays."""
+
+    def test_jmi_is_mean_gap(self):
+        crit = JMICriterion()
+        assert crit.needs_redundancy and crit.needs_conditional_redundancy
+        rel = jnp.asarray([1.0, 2.0])
+        st = crit.init_state(2)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.5, 1.0]),
+                                  conditional=jnp.asarray([1.0, 0.5])), 0)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.0, 1.0]),
+                                  conditional=jnp.asarray([0.5, 0.0])), 1)
+        # gaps (cond - marg): [0.5, -0.5] then [0.5, -1.0]; mean over 2
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [1.5, 1.25]
+        )
+        # l=0: empty state -> pure relevance
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, crit.init_state(2), 0)),
+            np.asarray(rel),
+        )
+
+    def test_cmim_is_min_gap(self):
+        crit = CMIMCriterion()
+        assert crit.needs_conditional_redundancy
+        rel = jnp.asarray([1.0, 2.0])
+        st = crit.init_state(2)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.5, 1.0]),
+                                  conditional=jnp.asarray([1.0, 0.5])), 0)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.0, 1.0]),
+                                  conditional=jnp.asarray([0.5, 0.0])), 1)
+        # min-fold keeps the WORST gap: [0.5, -1.0]
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [1.5, 1.0]
+        )
+
+    def test_cmim_inf_identity_never_leaks(self):
+        # The min-fold identity is +inf; at l=0 the objective must be pure
+        # finite relevance (rel + inf would poison the argmax), and a
+        # single fold must fully replace the identity.
+        crit = CMIMCriterion()
+        rel = jnp.asarray([3.0, 1.0])
+        obj0 = np.asarray(crit.objective(rel, crit.init_state(2), 0))
+        np.testing.assert_allclose(obj0, np.asarray(rel))
+        assert np.isfinite(obj0).all()
+        st = crit.update(crit.init_state(2),
+                         dict(marginal=jnp.asarray([1.0, 1.0]),
+                              conditional=jnp.asarray([1.5, 0.5])), 0)
+        obj1 = np.asarray(crit.objective(rel, st, 1))
+        np.testing.assert_allclose(obj1, [3.5, 0.5])
+        assert np.isfinite(obj1).all()
+
+    def test_terms_helpers(self):
+        arr = jnp.asarray([1.0])
+        assert marginal_terms(arr) is arr  # bare-array back-compat
+        d = dict(marginal=arr, conditional=arr + 1.0)
+        assert marginal_terms(d) is arr
+        np.testing.assert_allclose(np.asarray(conditional_terms(d)), [2.0])
+        for bad in (arr, dict(marginal=arr, conditional=None)):
+            with pytest.raises(ValueError, match="conditional"):
+                conditional_terms(bad)
+
+    def test_marginal_criteria_declare_no_conditional(self):
+        # The zero-cost contract hangs off this flag: if a marginal
+        # criterion ever flips it, every engine starts counting 3-way
+        # tables for it.
+        for crit in (MIDCriterion(), MIQCriterion(), MaxRelCriterion()):
+            assert not crit.needs_conditional_redundancy
+
+
+class TestConditionalTrajectory:
+    """Reference JMI/CMIM selections match an independent numpy fold over
+    the raw score primitives (the manual-fold oracle pattern)."""
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    def test_trajectory_matches_manual_fold(self, corral, criterion):
+        X, y = corral
+        L = 5
+        score = MIScore(2, 2)
+        sel = fit(X, y, "reference", L=L, criterion=criterion)
+        Xr = jnp.asarray(X.T)
+        yj = jnp.asarray(y)
+        rel = np.asarray(score.relevance(Xr, yj), np.float32)
+        gap_acc = (np.zeros_like(rel) if criterion == "jmi"
+                   else np.full_like(rel, np.inf))
+        mask = np.zeros(rel.shape, bool)
+        for l in range(L):
+            if l == 0:
+                g = rel.copy()
+            elif criterion == "jmi":
+                g = rel + gap_acc / np.float32(l)
+            else:
+                g = rel + gap_acc
+            g[mask] = -np.inf
+            k = int(np.argmax(g))
+            assert sel.selected_[l] == k
+            np.testing.assert_allclose(sel.gains_[l], g[k], rtol=1e-5,
+                                       atol=1e-6)
+            mask[k] = True
+            terms = score.redundancy_terms(Xr, Xr[k], yj, conditional=True)
+            gap = (np.asarray(terms["conditional"], np.float32)
+                   - np.asarray(terms["marginal"], np.float32))
+            gap_acc = (gap_acc + gap if criterion == "jmi"
+                       else np.minimum(gap_acc, gap))
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    def test_incremental_equals_recompute(self, corral, criterion):
+        X, y = corral
+        a = fit(X, y, "reference", L=6, criterion=criterion,
+                incremental=True)
+        b = fit(X, y, "reference", L=6, criterion=criterion,
+                incremental=False)
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        np.testing.assert_allclose(a.gains_, b.gains_, rtol=1e-5, atol=1e-6)
+
+    def test_jmi_cmim_steer_differently(self, corral):
+        # The conditional fold must actually change selections vs mid on
+        # the seed dataset, and the mean/min folds must differ from each
+        # other somewhere in the trajectory.
+        X, y = corral
+        mid = fit(X, y, "reference", L=6, criterion="mid")
+        jmi = fit(X, y, "reference", L=6, criterion="jmi")
+        cmim = fit(X, y, "reference", L=6, criterion="cmim")
+        assert not np.array_equal(jmi.gains_, mid.gains_)
+        assert not np.array_equal(jmi.gains_, cmim.gains_)
+
+    def test_cmim_tie_break_lowest_id(self, corral):
+        # Duplicate columns produce exactly tied objectives; the argmax
+        # contract (toward the lowest id) must hold for the min-fold too,
+        # on both the compiled and the host-driven fold.
+        X, y = corral
+        X = X.copy()
+        X[:, 12] = X[:, 5]
+        ref = fit(X, y, "reference", L=6, criterion="cmim")
+        got = MRMRSelector(num_select=6, criterion="cmim",
+                           block_obs=512).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+        picks = ref.selected_.tolist()
+        if 12 in picks:
+            assert 5 in picks and picks.index(5) < picks.index(12)
+
+
+class TestConditionalStreaming:
+    """Streaming JMI/CMIM == in-memory, at dividing / non-dividing /
+    oversized block sizes, under candidate batching, and with bins=."""
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    @pytest.mark.parametrize("block_obs", [128, 999, 4096])
+    def test_streaming_matches_reference(self, corral, criterion,
+                                         block_obs):
+        X, y = corral
+        ref = fit(X, y, "reference", criterion=criterion)
+        got = MRMRSelector(num_select=5, criterion=criterion,
+                           block_obs=block_obs).fit(ArraySource(X, y))
+        assert got.plan_.encoding == "streaming"
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+        np.testing.assert_allclose(got.gains_, ref.gains_, rtol=1e-4,
+                                   atol=1e-5)
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    @pytest.mark.parametrize("q", [2, 4])
+    def test_batched_candidates_bitwise(self, corral, criterion, q):
+        X, y = corral
+        plain = MRMRSelector(num_select=5, criterion=criterion,
+                             block_obs=512).fit(ArraySource(X, y))
+        batched = MRMRSelector(num_select=5, criterion=criterion,
+                               block_obs=512,
+                               batch_candidates=q).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(batched.selected_, plain.selected_)
+        np.testing.assert_array_equal(batched.gains_, plain.gains_)
+        assert batched.result_.io["passes"] <= plain.result_.io["passes"]
+
+    def test_state_bytes_ledger(self, corral):
+        # The zero-cost contract, asserted in bytes: a conditional
+        # criterion's statistics state carries the class axis (d_c x the
+        # pair state), a marginal criterion's does not.
+        X, y = corral
+        n, v, c = X.shape[1], 2, 2
+
+        def io_of(criterion):
+            sel = MRMRSelector(num_select=4, criterion=criterion,
+                               block_obs=512).fit(ArraySource(X, y))
+            return sel.result_.io
+
+        mid, jmi, cmim = io_of("mid"), io_of("jmi"), io_of("cmim")
+        # int32 counts: relevance (n, v, c), marginal pair (n, v, v),
+        # conditional pair (n, v, v*c) -- peak is the redundancy state
+        assert mid["state_bytes"] == n * v * max(v, c) * 4
+        assert jmi["state_bytes"] == n * v * v * c * 4
+        assert cmim["state_bytes"] == jmi["state_bytes"]
+        # the class axis rides the SAME passes -- no extra I/O
+        assert jmi["passes"] == mid["passes"]
+        assert jmi["bytes_read"] == mid["bytes_read"]
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    def test_bins_composition(self, criterion):
+        # Continuous data -> quantile bins -> conditional criterion: the
+        # in-memory binned fit and the streamed fused-encode fit agree.
+        rng = np.random.default_rng(7)
+        X = rng.normal(size=(900, 16)).astype(np.float32)
+        y = (X[:, 3] + 0.5 * X[:, 8] > 0).astype(np.int32)
+        a = MRMRSelector(num_select=4, criterion=criterion, bins=8).fit(X, y)
+        b = MRMRSelector(num_select=4, criterion=criterion, bins=8,
+                         block_obs=256).fit(ArraySource(X, y))
+        assert b.plan_.encoding == "streaming"
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        assert 3 in a.selected_.tolist()
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    def test_obs_sharded_mesh(self, corral, criterion):
+        # Tall regime: blocks shard over the data axis (1 device locally,
+        # 8 in CI); the psum'd 3-way state must match the reference.
+        X, y = corral
+        mesh = make_mesh((len(jax.devices()),), ("data",))
+        got = MRMRSelector(num_select=4, criterion=criterion,
+                           block_obs=512, mesh=mesh).fit(ArraySource(X, y))
+        ref = fit(X, y, "reference", L=4, criterion=criterion)
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+        np.testing.assert_allclose(got.gains_, ref.gains_, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_feature_sharded_conditional_state(self):
+        # Wide regime: the (n, v, v*c) conditional statistics state shards
+        # over the feature axis like every other leaf.
+        from repro.data.sources import CorralSource
+
+        X, y = CorralSource(256, 1024, seed=5).materialize()
+        want = MRMRSelector(num_select=4, criterion="jmi",
+                            encoding="alternative").fit(X, y)
+        mesh = make_mesh((len(jax.devices()),), ("model",))
+        got = MRMRSelector(num_select=4, criterion="jmi", block_obs=100,
+                           mesh=mesh).fit(ArraySource(X, y))
+        assert got.plan_.feat_axes == ("model",)
+        np.testing.assert_array_equal(got.selected_, want.selected_)
+        np.testing.assert_allclose(got.gains_, want.gains_, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_grid_2d_mesh(self, corral):
+        # 2-D obs x feat grid: conditional state pvaried over feat axes,
+        # blocks split over both.
+        X, y = corral
+        mesh = make_mesh((1, len(jax.devices())), ("data", "model"))
+        got = MRMRSelector(num_select=4, criterion="cmim", block_obs=512,
+                           mesh=mesh).fit(ArraySource(X, y))
+        ref = fit(X, y, "reference", L=4, criterion="cmim")
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+
+
+class TestConditionalGuards:
+    def test_pearson_rejects_conditional_in_memory(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(200, 8)).astype(np.float32)
+        y = (X[:, 0] > 0).astype(np.int32)
+        with pytest.raises(ValueError, match="class-conditioned"):
+            MRMRSelector(num_select=2, criterion="jmi").fit(X, y)
+
+    def test_pearson_rejects_conditional_streaming(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(200, 8)).astype(np.float32)
+        y = (X[:, 0] > 0).astype(np.int32)
+        with pytest.raises(ValueError, match="bins="):
+            MRMRSelector(num_select=2, criterion="cmim").fit(
+                ArraySource(X, y)
+            )
+
+    def test_score_without_conditional_decomposition(self, corral):
+        X, y = corral
+        from repro.core.mrmr import check_conditional_support
+        from repro.core.scores import PearsonMIScore
+
+        check_conditional_support(MIScore(2, 2), resolve_criterion("jmi"))
+        check_conditional_support(PearsonMIScore(),
+                                  resolve_criterion("mid"))
+        with pytest.raises(ValueError, match="conditional"):
+            check_conditional_support(PearsonMIScore(),
+                                      resolve_criterion("cmim"))
 
 
 class TestGuards:

@@ -1,0 +1,261 @@
+"""Ecosystem interop: the sklearn ``MRMRTransformer`` adapter and the
+columnar ``ParquetSource``/``ArrowSource`` readers, plus their composition
+(Parquet -> streamed selection, transformer inside Pipeline/GridSearchCV).
+
+Both third-party deps are soft: the whole module skips cleanly when
+sklearn or pyarrow is absent from the environment.
+"""
+
+import numpy as np
+import pytest
+
+from repro import MIScore, MRMRSelector
+from repro.data.binning import BinnedSource
+from repro.data.sources import ArraySource
+from repro.data.synthetic import corral_dataset
+
+sklearn = pytest.importorskip("sklearn")
+pa = pytest.importorskip("pyarrow")
+import pyarrow.parquet as pq  # noqa: E402
+from sklearn.base import clone  # noqa: E402
+from sklearn.linear_model import LogisticRegression  # noqa: E402
+from sklearn.model_selection import GridSearchCV  # noqa: E402
+from sklearn.pipeline import make_pipeline  # noqa: E402
+
+from repro.interop.sklearn import MRMRTransformer  # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def corral():
+    X, y = corral_dataset(1500, 24, seed=3, flip_prob=0.02)
+    return np.asarray(X, np.int32), np.asarray(y)
+
+
+def _table(X, y, target_name="label"):
+    cols = {f"f{j}": X[:, j] for j in range(X.shape[1])}
+    cols[target_name] = y
+    return pa.table(cols)
+
+
+class TestMRMRTransformer:
+    def test_fit_transform_roundtrip(self, corral):
+        X, y = corral
+        tr = MRMRTransformer(num_select=5).fit(X, y)
+        ref = MRMRSelector(num_select=5).fit(X, y)
+        np.testing.assert_array_equal(tr.selected_, ref.selected_)
+        np.testing.assert_array_equal(tr.gains_, ref.gains_)
+        # sklearn contract: transform keeps ascending column order
+        keep = np.sort(tr.selected_)
+        np.testing.assert_array_equal(
+            np.flatnonzero(tr.get_support()), keep
+        )
+        np.testing.assert_array_equal(tr.transform(X), X[:, keep])
+        assert tr.n_features_in_ == X.shape[1]
+
+    def test_requires_y(self, corral):
+        X, _ = corral
+        with pytest.raises(ValueError, match="supervised"):
+            MRMRTransformer(num_select=3).fit(X)
+
+    def test_clone_roundtrip(self):
+        tr = MRMRTransformer(
+            num_select=7, criterion="jmi", bins=16, block_obs=1024
+        )
+        params = clone(tr).get_params()
+        assert params["num_select"] == 7
+        assert params["criterion"] == "jmi"
+        assert params["bins"] == 16
+        assert params["block_obs"] == 1024
+
+    @pytest.mark.parametrize("criterion", ["jmi", "cmim"])
+    def test_criterion_passthrough(self, corral, criterion):
+        X, y = corral
+        tr = MRMRTransformer(num_select=5, criterion=criterion).fit(X, y)
+        ref = MRMRSelector(num_select=5, criterion=criterion).fit(X, y)
+        np.testing.assert_array_equal(tr.selected_, ref.selected_)
+        assert tr.selector_.result_ is not None
+
+    def test_bins_route_on_floats(self):
+        rng = np.random.default_rng(11)
+        X = rng.normal(size=(800, 12)).astype(np.float32)
+        y = (X[:, 2] - X[:, 7] > 0).astype(np.int32)
+        tr = MRMRTransformer(num_select=4, criterion="jmi", bins=8)
+        Xt = tr.fit_transform(X, y)
+        assert Xt.shape == (800, 4)
+        assert {2, 7} <= set(tr.selected_.tolist())
+
+    def test_pipeline(self, corral):
+        X, y = corral
+        pipe = make_pipeline(
+            MRMRTransformer(num_select=6), LogisticRegression(max_iter=200)
+        )
+        pipe.fit(X, y)
+        assert pipe.score(X, y) > 0.6
+        assert pipe[:-1].transform(X).shape == (X.shape[0], 6)
+
+    def test_grid_search_over_num_select(self, corral):
+        X, y = corral
+        pipe = make_pipeline(
+            MRMRTransformer(num_select=2), LogisticRegression(max_iter=200)
+        )
+        gs = GridSearchCV(
+            pipe,
+            {"mrmrtransformer__num_select": [2, 6]},
+            cv=2,
+            error_score="raise",
+        )
+        gs.fit(X, y)
+        assert gs.best_params_["mrmrtransformer__num_select"] in (2, 6)
+
+    def test_score_passthrough(self, corral):
+        X, y = corral
+        tr = MRMRTransformer(num_select=4, score=MIScore(2, 2)).fit(X, y)
+        ref = MRMRSelector(num_select=4, score=MIScore(2, 2)).fit(X, y)
+        np.testing.assert_array_equal(tr.selected_, ref.selected_)
+
+
+class TestParquetSource:
+    def test_roundtrip_matches_array_source(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        pq.write_table(_table(X, y), path)
+        from repro.data.sources import ParquetSource
+
+        src = ParquetSource(path)
+        assert src.num_obs == X.shape[0]
+        assert src.num_features == X.shape[1]
+        assert src.feature_dtype == np.int32
+        Xm, ym = src.materialize()
+        np.testing.assert_array_equal(Xm, X)
+        np.testing.assert_array_equal(ym, y)
+
+    def test_block_size_independence(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        # small row groups so iter_batches crosses group boundaries
+        pq.write_table(_table(X, y), path, row_group_size=100)
+        from repro.data.sources import ParquetSource
+
+        src = ParquetSource(path)
+        for block_obs in (64, 999, 10_000):
+            got_x, got_y = [], []
+            for xb, yb in src.iter_blocks(block_obs):
+                assert xb.shape[0] <= block_obs
+                assert xb.flags["C_CONTIGUOUS"]
+                got_x.append(xb)
+                got_y.append(yb)
+            np.testing.assert_array_equal(np.concatenate(got_x), X)
+            np.testing.assert_array_equal(np.concatenate(got_y), y)
+
+    def test_named_target_column(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        # target written FIRST: name-based resolution must not care
+        tbl = _table(X, y).select(
+            ["label"] + [f"f{j}" for j in range(X.shape[1])]
+        )
+        pq.write_table(tbl, path)
+        from repro.data.sources import ParquetSource
+
+        src = ParquetSource(path, target_col="label")
+        Xm, ym = src.materialize()
+        np.testing.assert_array_equal(Xm, X)
+        np.testing.assert_array_equal(ym, y)
+
+    def test_missing_target_raises(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        pq.write_table(_table(X, y), path)
+        from repro.data.sources import ParquetSource
+
+        with pytest.raises(ValueError, match="nope"):
+            ParquetSource(path, target_col="nope")
+
+    def test_fingerprint_tracks_knobs(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        pq.write_table(_table(X, y), path)
+        from repro.data.sources import ParquetSource
+
+        a = ParquetSource(path).fingerprint()
+        assert a == ParquetSource(path).fingerprint()
+        assert a != ParquetSource(path, target_col="f0").fingerprint()
+        assert a != ParquetSource(path, dtype=np.float32).fingerprint()
+
+    def test_streamed_fit_matches_in_memory(self, tmp_path, corral):
+        X, y = corral
+        path = str(tmp_path / "d.parquet")
+        pq.write_table(_table(X, y), path, row_group_size=256)
+        from repro.data.sources import ParquetSource
+
+        ref = MRMRSelector(num_select=5, criterion="jmi").fit(X, y)
+        got = MRMRSelector(num_select=5, criterion="jmi",
+                           block_obs=500).fit(ParquetSource(path))
+        assert got.plan_.encoding == "streaming"
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+        np.testing.assert_allclose(got.gains_, ref.gains_, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_float_parquet_with_bins(self, tmp_path):
+        rng = np.random.default_rng(5)
+        X = rng.normal(size=(700, 10)).astype(np.float32)
+        y = (X[:, 1] + X[:, 6] > 0).astype(np.int32)
+        path = str(tmp_path / "f.parquet")
+        pq.write_table(_table(X, y), path)
+        from repro.data.sources import ParquetSource
+
+        src = ParquetSource(path)
+        assert src.feature_dtype == np.float32
+        a = MRMRSelector(num_select=3, criterion="cmim", bins=8,
+                         block_obs=200).fit(src)
+        b = MRMRSelector(num_select=3, criterion="cmim", bins=8,
+                         block_obs=200).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+
+    def test_binned_source_composition(self, tmp_path):
+        rng = np.random.default_rng(9)
+        X = rng.normal(size=(600, 8)).astype(np.float32)
+        y = (X[:, 4] > 0).astype(np.int32)
+        path = str(tmp_path / "f.parquet")
+        pq.write_table(_table(X, y), path)
+        from repro.data.sources import ParquetSource
+
+        binned = BinnedSource(ParquetSource(path), 6)
+        st = binned.stats(block_obs=250)
+        assert st.discrete and st.num_values == 6
+        got = MRMRSelector(num_select=3, block_obs=250).fit(binned)
+        assert 4 in got.selected_.tolist()
+
+
+class TestArrowSource:
+    def test_table_roundtrip(self, corral):
+        X, y = corral
+        from repro.data.sources import ArrowSource
+
+        src = ArrowSource(_table(X, y))
+        assert src.num_obs == X.shape[0]
+        assert src.num_features == X.shape[1]
+        Xm, ym = src.materialize(block_obs=333)
+        np.testing.assert_array_equal(Xm, X)
+        np.testing.assert_array_equal(ym, y)
+
+    def test_record_batch_accepted(self, corral):
+        X, y = corral
+        from repro.data.sources import ArrowSource
+
+        batch = _table(X, y).to_batches()[0]
+        src = ArrowSource(batch, target_col="label")
+        Xm, ym = src.materialize()
+        np.testing.assert_array_equal(Xm, X)
+        np.testing.assert_array_equal(ym, y)
+
+    def test_fit_matches_array_source(self, corral):
+        X, y = corral
+        from repro.data.sources import ArrowSource
+
+        a = MRMRSelector(num_select=5, criterion="cmim",
+                         block_obs=400).fit(ArrowSource(_table(X, y)))
+        b = MRMRSelector(num_select=5, criterion="cmim",
+                         block_obs=400).fit(ArraySource(X, y))
+        np.testing.assert_array_equal(a.selected_, b.selected_)
+        np.testing.assert_array_equal(a.gains_, b.gains_)
