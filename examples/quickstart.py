@@ -133,3 +133,29 @@ with SelectionService(workers=2) as svc:
     print(f"{'service':>12s}: selected {[int(v) for v in result.selected]}")
     print(f"{'':>12s}  resubmission cache_hit={info.cache_hit} "
           f"cache={svc.stats()['cache']}")
+
+# Multi-host map-reduce: the same streaming fit across N jax.distributed
+# processes, each reading ONLY its shard of the data (§III applied to
+# hosts: tall -> row ranges, wide -> column ranges, both-large -> a 2-D
+# host grid).  The per-pass reduce is an explicit psum of exact integer
+# statistics, so every host commits the identical selection — asserted
+# below against the single-process fit.  In a worker you would call
+# init_multihost() then MRMRSelector(..., hosts="auto"); here we drive
+# the spawn-mode launcher, which stands up a loopback 2-process cluster.
+# (Real cluster: one invocation per machine with --coordinator/--process-id.)
+import json
+import subprocess
+import sys
+
+proc = subprocess.run(
+    [sys.executable, "-m", "repro.launch.select_multihost",
+     "--num-processes", "2", "--rows", "6000", "--cols", "24",
+     "--select", "4", "--block-obs", "1500"],
+    capture_output=True, text=True, check=True,
+)
+mh = json.loads(proc.stdout.splitlines()[-1])
+agg = mh["hosts"]["aggregate"]["bytes_read"]
+shares = [round(h["bytes_read"] / agg, 2) for h in mh["hosts"]["per_host"]]
+print(f"{'multihost':>12s}: grid={mh['hosts']['grid']} "
+      f"selected {mh['selected']}")
+print(f"{'':>12s}  per-host share of bytes read: {shares}")

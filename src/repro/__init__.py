@@ -91,6 +91,38 @@ math is asserted by tests and benchmarks, not eyeballed.  (CLI: ``python
 -m repro.launch.select --batch-candidates 8 --spill-dir /tmp/spill
 --readahead 2``.)
 
+Multi-host
+----------
+
+The paper's headline regime is *cluster* scale: MapReduce workers each
+reading only their partition, one reduce merging the per-partition
+statistics.  ``repro.dist.multihost`` is that layer on
+``jax.distributed``: ``hosts=N`` (or ``"auto"`` under a launcher) applies
+the same §III aspect rule across *processes* — tall partitions the
+observation range, wide partitions the column range, both-large gets the
+2-D host grid — and each host's block iteration walks ONLY its own
+ranges (:meth:`~repro.data.sources.DataSource.iter_shard_blocks`), so a
+host streams ``1/N`` of the bytes.  The per-pass reduce is an explicit
+``shard_map``-ped psum of the exact integer statistics
+(:class:`~repro.dist.multihost.HostCollectives`), after which every host
+folds the criterion identically and commits the identical pick — a
+genuine map-reduce with no designated master, and selections stay
+**bitwise-identical** to the single-process streaming engine (a tested
+invariant, including under ``spill_dir`` + ``batch_candidates``, whose
+spill entries are namespaced per process)::
+
+    # per process, after jax.distributed is up (or init_multihost()):
+    from repro.dist.multihost import init_multihost
+    init_multihost()                        # env-driven; idempotent
+    sel = MRMRSelector(num_select=10, hosts="auto").fit(source)
+    sel.result_.io["host"]                  # this host's shard ranges
+    sel.result_.io["hosts"]["aggregate"]    # exact cluster-wide ledger
+
+``python -m repro.launch.select_multihost --num-processes N ...`` spawns
+an N-process loopback cluster (or joins a real one via ``--coordinator``
+/ ``--process-id`` or the ``REPRO_*`` env vars) and asserts every host
+committed the same selection.
+
 Custom scores (paper §IV.D) run through the same front door::
 
     from repro import CustomScore
@@ -254,7 +286,8 @@ Layers
   selection criteria (``repro.core.criteria``); incremental fold
   optimisation.
 * ``repro.dist``    — the distribution substrate: named meshes, logical
-  sharding rules, pipeline parallelism, jax version compat.
+  sharding rules, multi-host map-reduce (``repro.dist.multihost``),
+  pipeline parallelism, jax version compat.
 * ``repro.kernels`` — Pallas TPU kernels for the scoring hot spots.
 * ``repro.models``  — architecture zoo (dense / MoE / SSM / hybrid /
   enc-dec / VLM backbones) used as workloads for the substrate.
@@ -266,12 +299,15 @@ Layers
 """
 
 from repro.core import (  # noqa: F401
+    CIFECriterion,
     CMIMCriterion,
     Criterion,
     CustomScore,
     FeatureSelector,
+    ICAPCriterion,
     JMICriterion,
     MIDCriterion,
+    MIFSCriterion,
     MIQCriterion,
     MIScore,
     MRMRResult,
@@ -288,15 +324,18 @@ from repro.core import (  # noqa: F401
     register_engine,
 )
 
-__version__ = "1.5.0"
+__version__ = "1.6.0"
 
 __all__ = [
+    "CIFECriterion",
     "CMIMCriterion",
     "Criterion",
     "CustomScore",
     "FeatureSelector",
+    "ICAPCriterion",
     "JMICriterion",
     "MIDCriterion",
+    "MIFSCriterion",
     "MIQCriterion",
     "MIScore",
     "MRMRResult",

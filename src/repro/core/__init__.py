@@ -2,10 +2,13 @@
 # The front door is MRMRSelector (repro.core.selector); the driver
 # functions remain public for benchmarks and direct engine access.
 from repro.core.criteria import (  # noqa: F401
+    CIFECriterion,
     CMIMCriterion,
     Criterion,
+    ICAPCriterion,
     JMICriterion,
     MIDCriterion,
+    MIFSCriterion,
     MIQCriterion,
     MaxRelCriterion,
     available_criteria,

@@ -335,11 +335,96 @@ class CMIMCriterion(Criterion):
         return jnp.where(jnp.asarray(l) == 0, rel, rel + state["worst_gap"])
 
 
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class MIFSCriterion(Criterion):
+    """Mutual information feature selection (Battiti 1994, ``β = 1``).
+
+    ``g_k = rel_k - Σ_j I(x_k; x_j)``: relevance minus the *summed* (not
+    mean) pairwise redundancy — the original ITFS penalty that mRMR later
+    normalised by the selection size.  The un-normalised sum makes the
+    penalty grow with every pick, so MIFS turns conservative late in a
+    fit where ``mid`` keeps trading; both share the exact ``red_sum``
+    fold, so MIFS costs nothing the engines don't already compute.
+    """
+
+    name = "mifs"
+
+    def init_state(self, n: int):
+        return dict(red_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, terms, l):
+        return dict(red_sum=state["red_sum"] + marginal_terms(terms))
+
+    def objective(self, rel: Array, state, l) -> Array:
+        return rel - state["red_sum"]
+
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class CIFECriterion(Criterion):
+    """Conditional infomax feature extraction (Lin & Tang 2006).
+
+    ``g_k = rel_k + Σ_j [I(x_k; x_j | y) - I(x_k; x_j)]`` — JMI's
+    complementarity gap, but *summed* rather than averaged (in Brown et
+    al.'s unified form: ``β = γ = 1``).  Rewards candidates whose
+    dependence on the selected set is class-informative at full weight,
+    so redundancy penalties and synergy bonuses both scale with the
+    selection size.  Same running ``gap_sum`` fold as JMI; only the
+    normalisation differs.
+    """
+
+    name = "cife"
+    needs_conditional_redundancy = True
+
+    def init_state(self, n: int):
+        return dict(gap_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, terms, l):
+        gap = conditional_terms(terms) - marginal_terms(terms)
+        return dict(gap_sum=state["gap_sum"] + gap)
+
+    def objective(self, rel: Array, state, l) -> Array:
+        return rel + state["gap_sum"]
+
+
+@register_criterion
+@dataclasses.dataclass(frozen=True)
+class ICAPCriterion(Criterion):
+    """Interaction capping (Jakulin 2005).
+
+    ``g_k = rel_k - Σ_j max(0, I(x_k; x_j) - I(x_k; x_j | y))``: penalise
+    only the part of each pairwise dependence the class does NOT explain,
+    and never reward synergy — the interaction term is capped at zero, so
+    ICAP sits between mRMR (which penalises all dependence) and CIFE
+    (which lets synergy offset redundancy without bound).  The fold is a
+    running sum of the clipped per-selection term.
+    """
+
+    name = "icap"
+    needs_conditional_redundancy = True
+
+    def init_state(self, n: int):
+        return dict(cap_sum=jnp.zeros((n,), jnp.float32))
+
+    def update(self, state, terms, l):
+        capped = jnp.maximum(
+            marginal_terms(terms) - conditional_terms(terms), 0.0
+        )
+        return dict(cap_sum=state["cap_sum"] + capped)
+
+    def objective(self, rel: Array, state, l) -> Array:
+        return rel - state["cap_sum"]
+
+
 __all__ = [
+    "CIFECriterion",
     "CMIMCriterion",
     "Criterion",
+    "ICAPCriterion",
     "JMICriterion",
     "MIDCriterion",
+    "MIFSCriterion",
     "MIQCriterion",
     "MaxRelCriterion",
     "available_criteria",

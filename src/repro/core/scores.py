@@ -148,6 +148,14 @@ class ScoreFn:
     # set this and override redundancy_terms with conditional=True support;
     # conditional criteria (JMI/CMIM) require it.
     supports_conditional: bool = False
+    # Scores whose streaming state merges across independent row
+    # partitions by plain elementwise addition (contingency counts).
+    # Required for obs-partitioned multi-host fits, where each host
+    # accumulates its own rows and one psum reduces.  Pearson's running
+    # moments do NOT qualify: the mean shifts are frozen from each
+    # partition's first block, so summing shifted moments from different
+    # partitions mixes incompatible origins.
+    supports_state_merge: bool = False
 
     def relevance(self, cands: Array, cls: Array) -> Array:  # (F, M),(M,)->(F,)
         raise NotImplementedError
@@ -223,6 +231,10 @@ class MIScore(ScoreFn):
 
     supports_streaming = True
     supports_conditional = True
+    # int32 contingency counts over disjoint row partitions sum exactly:
+    # the merged statistics (hence every finalised score) are bitwise-
+    # identical to one process having counted every block.
+    supports_state_merge = True
 
     def __post_init__(self):
         if self.use_pallas not in (True, False, "auto"):

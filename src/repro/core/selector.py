@@ -107,6 +107,8 @@ class SelectionPlan:
     spill_budget_bytes: int | None = None  # LRU byte budget for spill_dir
     readahead: int = 0                # streaming: raw blocks read across
                                       # pass boundaries (0 = off)
+    hosts: int = 1                    # streaming: jax.distributed processes
+                                      # sharing the fit (1 = single-host)
 
     @property
     def mesh_axes(self) -> tuple:
@@ -539,6 +541,15 @@ class MRMRSelector:
         streams ahead of the consumer, across pass boundaries, hiding
         each pass's cold-start I/O bubble (0 = off; supersedes
         ``prefetch`` when positive).
+      hosts: streaming fits only — run the fit across this many
+        ``jax.distributed`` processes (``"auto"`` = ``jax.process_count()``
+        after :func:`repro.dist.init_multihost`).  The §III rule then
+        applies across *hosts*: each process reads only its block/column
+        ranges and per-pass statistics merge with explicit collectives;
+        every host returns the identical result.  Per-host devices still
+        shard each local block over ``obs_axes``; device feature-sharding
+        is disabled under multi-host so cross-host state shapes align.
+        ``None``/1 keeps today's single-process behaviour.
       bins: discretise continuous features on the fly into this many
         equal-frequency bins (one streaming quantile-sketch pass; see
         :mod:`repro.data.binning`), so float data runs the exact discrete
@@ -574,6 +585,7 @@ class MRMRSelector:
     spill_dir: str | None = None
     spill_budget_bytes: int | None = None
     readahead: int = 0
+    hosts: int | str | None = None
 
     selected_: np.ndarray | None = None
     gains_: np.ndarray | None = None
@@ -666,6 +678,11 @@ class MRMRSelector:
         if not plan.mesh_shape:
             return None
         devices = self.devices if not isinstance(self.devices, int) else None
+        if getattr(plan, "hosts", 1) > 1 and devices is None:
+            # Multi-host: the per-host block mesh is LOCAL — jax.devices()
+            # spans every process under jax.distributed, and a mesh over
+            # non-addressable devices cannot place host blocks.
+            devices = jax.local_devices()
         return make_mesh(plan.mesh_shape, plan.mesh_axes, devices=devices)
 
     def _resolve_source_score(self, source: DataSource) -> ScoreFn:
@@ -723,6 +740,19 @@ class MRMRSelector:
             )
         return self.score
 
+    def _resolve_hosts(self) -> int:
+        """The multi-host process count: ``None``/1 single-host, ``"auto"``
+        whatever ``jax.distributed`` reports, an int taken at face value
+        (mismatches against the actual cluster fail in the collectives)."""
+        if self.hosts in (None, 1):
+            return 1
+        if self.hosts == "auto":
+            return int(jax.process_count())
+        h = int(self.hosts)
+        if h < 1:
+            raise ValueError(f"hosts must be >= 1 or 'auto', got {self.hosts!r}")
+        return h
+
     def _resolve_stream_plan(
         self, source: DataSource, score: ScoreFn
     ) -> SelectionPlan:
@@ -730,11 +760,53 @@ class MRMRSelector:
         shards blocks over observations, wide shards blocks AND statistics
         over features, both-large runs a 2-D (obs × feat) grid.  A user
         mesh overrides the rule: whatever obs/feat axes it carries are
-        used (both present -> 2-D)."""
+        used (both present -> 2-D).
+
+        With ``hosts > 1`` the §III rule is applied across *processes*
+        (see :func:`repro.dist.multihost.resolve_host_shards`); the
+        device layout here is then per-host — blocks shard over this
+        host's LOCAL devices on the observation axes only, since device
+        feature-sharding would pad the statistics width past the exact
+        shard width and break cross-host state alignment."""
         m, n = source.num_obs, source.num_features
         aspect = m / max(n, 1)
         obs = _axes_tuple(self.obs_axes)
         feat = _axes_tuple(self.feat_axes)
+        hosts = self._resolve_hosts()
+        if hosts > 1:
+            if self.mesh is not None:
+                raise ValueError(
+                    "hosts > 1 plans the per-host device mesh from local "
+                    "devices; pass devices= instead of mesh="
+                )
+            n_dev = (
+                len(jax.local_devices())
+                if self.devices is None
+                else _device_count(self.devices)
+            )
+            if n_dev <= 1:
+                obs, feat, shape = (), (), ()
+            else:
+                obs, feat, shape = obs[:1] or ("data",), (), (n_dev,)
+            block_obs = effective_block_obs(
+                self.block_obs, math.prod(shape) if obs else 1
+            )
+            q = int(self.batch_candidates)
+            if q < 1:
+                raise ValueError(f"batch_candidates must be >= 1, got {q}")
+            if int(self.readahead) < 0:
+                raise ValueError(
+                    f"readahead must be >= 0, got {self.readahead}"
+                )
+            return SelectionPlan(
+                encoding="streaming", obs_axes=obs, feat_axes=feat,
+                mesh_shape=shape, block=self.block, block_obs=block_obs,
+                incremental=True, prefetch=resolve_prefetch(self.prefetch),
+                score=score, criterion=resolve_criterion(self.criterion),
+                batch_candidates=q, spill_dir=self.spill_dir,
+                spill_budget_bytes=self.spill_budget_bytes,
+                readahead=int(self.readahead), hosts=hosts,
+            )
         if self.mesh is not None:
             obs = tuple(a for a in obs if a in self.mesh.shape)
             feat = tuple(a for a in feat if a in self.mesh.shape)
@@ -888,6 +960,11 @@ class MRMRSelector:
             raise ValueError(
                 "y is required for array inputs (only DataSource fits "
                 "carry their own targets)"
+            )
+        if self._resolve_hosts() > 1:
+            raise ValueError(
+                "hosts > 1 runs the streaming engine: pass a DataSource, "
+                "or arrays with encoding='streaming'"
             )
         X = jnp.asarray(X)
         y = jnp.asarray(y)

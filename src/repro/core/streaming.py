@@ -102,7 +102,8 @@ from repro.core.scores import MIScore, ScoreFn
 from repro.core.selector import check_num_select, register_engine
 from repro.data.binning import BinnedSource, _as_class_labels
 from repro.data.block_cache import BlockCacheSource
-from repro.data.sources import DataSource, as_source
+from repro.data.sources import DataSource, ShardSource, as_source
+from repro.dist.multihost import HostCollectives, HostShardSpec
 from repro.dist.streaming import (
     BlockPlacer,
     CrossPassReader,
@@ -292,6 +293,8 @@ def _score_pass(
     binned: "BinnedSource | None" = None,
     batch: int | None = None,
     conditional: bool = False,
+    merge_state=None,
+    keep: int | None = None,
 ):
     """One full map-reduce pass over ``raw_pass`` (an ``(X, y)`` raw host
     block iterator): ``(N,)`` scores of every feature against the class
@@ -300,7 +303,15 @@ def _score_pass(
 
     ``conditional=True`` (JMI/CMIM redundancy passes) fuses the class into
     the target codes and returns ``dict(marginal=..., conditional=...)``
-    arrays instead — both terms from the ONE counting sweep."""
+    arrays instead — both terms from the ONE counting sweep.
+
+    ``merge_state`` is the multi-host reduce hook: applied to the fully
+    accumulated state *before* finalize (a cross-process psum of exact
+    integer counts), so finalisation runs on the merged statistics
+    exactly as if one process had counted every block.  ``keep``
+    overrides how many leading feature rows survive the padding slice
+    (default: the source's full width; a column-sharded host keeps only
+    its own columns, dropping appended target columns too)."""
     io.passes += 1
     binner = binned.binner if binned is not None else None
     cond = conditional and target_cols is not None
@@ -336,7 +347,10 @@ def _score_pass(
         placed = (placer(X_blk, tgt) for X_blk, tgt in host_blocks())
     for triple in placed:
         state = acc_fn(state, *triple)
-    n = source.num_features  # drop feature-padding columns on every read
+    if merge_state is not None:
+        state = merge_state(state)
+    # Drop feature-padding columns on every read.
+    n = source.num_features if keep is None else int(keep)
     if cond:
         fin = (
             score.finalize_conditional
@@ -354,6 +368,73 @@ def _score_pass(
     return scores[:, :n]
 
 
+def _greedy_select(run_pass, crit: Criterion, n: int, num_select: int, q: int):
+    """The host-driven greedy loop shared by the single- and multi-host
+    fits: one relevance pass, then exact per-pick criterion folds with
+    ``q``-wide redundancy speculation.  ``run_pass(target_cols, batch=)``
+    hides where blocks come from and how per-host statistics merge — by
+    the time a vector reaches this loop every participating host holds
+    the identical full-width copy, so every host commits the identical
+    pick with no designated master."""
+    rel = run_pass(None)
+    rel_j = jnp.asarray(rel)
+    cstate = crit.init_state(n)
+    mask = np.zeros((n,), bool)
+    selected = np.full((num_select,), -1, np.int32)
+    gains = np.zeros((num_select,), np.float32)
+    # Speculated redundancy vectors by feature id: a vector is a pure
+    # pairwise property of the data, so once computed it stays valid
+    # for the whole fit (an in-batch pick never invalidates it).
+    pending: dict = {}
+    for l in range(num_select):
+        # The criterion fold is the same pure-f32 jnp math the device
+        # drivers trace, so argmax ties resolve identically to the
+        # in-memory engines (toward the lowest id).
+        g = np.array(crit.objective(rel_j, cstate, l), np.float32)
+        g[mask] = _NEG_INF
+        k = int(np.argmax(g))
+        selected[l], gains[l] = k, g[k]
+        mask[k] = True
+        if l + 1 >= num_select or not crit.needs_redundancy:
+            continue
+        if k in pending:
+            red = pending.pop(k)  # speculation hit: zero I/O
+        else:
+            if q == 1:
+                red = run_pass(k)
+            else:
+                # One sweep scores the needed column plus the top
+                # q-1 remaining candidates by the CURRENT objective —
+                # the same lazy-greedy bet that objectives shift
+                # slowly between folds.  Short batches pad by
+                # repeating the last column so the accumulate keeps
+                # one compiled shape per q.
+                cols = [k]
+                for j in np.argsort(-g, kind="stable"):
+                    if len(cols) == q:
+                        break
+                    j = int(j)
+                    if mask[j] or j in pending or g[j] == _NEG_INF:
+                        continue
+                    cols.append(j)
+                padded = cols + [cols[-1]] * (q - len(cols))
+                reds = run_pass(padded, batch=q)
+                for i, c in enumerate(cols):
+                    pending[c] = (
+                        {k2: v[i] for k2, v in reds.items()}
+                        if isinstance(reds, dict)
+                        else reds[i]
+                    )
+                red = pending.pop(k)
+        terms = (
+            {k2: jnp.asarray(v) for k2, v in red.items()}
+            if isinstance(red, dict)
+            else jnp.asarray(red)
+        )
+        cstate = crit.update(cstate, terms, l)
+    return rel, selected, gains
+
+
 def mrmr_streaming(
     source,
     num_select: int,
@@ -369,6 +450,8 @@ def mrmr_streaming(
     spill_dir: str | None = None,
     spill_budget_bytes: int | None = None,
     readahead: int = 0,
+    shards: "HostShardSpec | None" = None,
+    collectives: "HostCollectives | None" = None,
 ) -> MRMRResult:
     """Greedy mRMR over a :class:`~repro.data.sources.DataSource`.
 
@@ -404,6 +487,13 @@ def mrmr_streaming(
       readahead: raw blocks the cross-pass reader streams ahead of the
         consumer, across pass boundaries (0 = off).  Supersedes
         ``prefetch`` when positive.
+      shards: a :class:`~repro.dist.multihost.HostShardSpec` placing this
+        process on the cross-host grid — the fit then reads ONLY this
+        host's block/column ranges and merges per-pass statistics with
+        explicit collectives (see :func:`_mrmr_streaming_multihost`).
+        ``None`` or a single-host spec runs today's one-process path.
+      collectives: a pre-built :class:`~repro.dist.multihost.
+        HostCollectives` for ``shards`` (built on demand when omitted).
     """
     crit = resolve_criterion(criterion)
     source = as_source(*source) if isinstance(source, tuple) else as_source(source)
@@ -426,6 +516,25 @@ def mrmr_streaming(
         raise ValueError(f"batch_candidates must be >= 1, got {q}")
     if readahead < 0:
         raise ValueError(f"readahead must be >= 0, got {readahead}")
+
+    if shards is not None and not shards.is_single_host:
+        return _mrmr_streaming_multihost(
+            source,
+            num_select,
+            score,
+            spec=shards,
+            coll=collectives,
+            block_obs=block_obs,
+            mesh=mesh,
+            obs_axes=obs_axes,
+            feat_axes=feat_axes,
+            prefetch=prefetch,
+            crit=crit,
+            q=q,
+            spill_dir=spill_dir,
+            spill_budget_bytes=spill_budget_bytes,
+            readahead=readahead,
+        )
 
     # A caller-wrapped BlockCacheSource reports its counters on the result
     # the same as an engine-built one.
@@ -509,62 +618,7 @@ def mrmr_streaming(
         )
 
     try:
-        rel = run_pass(None)
-        rel_j = jnp.asarray(rel)
-        cstate = crit.init_state(n)
-        mask = np.zeros((n,), bool)
-        selected = np.full((num_select,), -1, np.int32)
-        gains = np.zeros((num_select,), np.float32)
-        # Speculated redundancy vectors by feature id: a vector is a pure
-        # pairwise property of the data, so once computed it stays valid
-        # for the whole fit (an in-batch pick never invalidates it).
-        pending: dict = {}
-        for l in range(num_select):
-            # The criterion fold is the same pure-f32 jnp math the device
-            # drivers trace, so argmax ties resolve identically to the
-            # in-memory engines (toward the lowest id).
-            g = np.array(crit.objective(rel_j, cstate, l), np.float32)
-            g[mask] = _NEG_INF
-            k = int(np.argmax(g))
-            selected[l], gains[l] = k, g[k]
-            mask[k] = True
-            if l + 1 >= num_select or not crit.needs_redundancy:
-                continue
-            if k in pending:
-                red = pending.pop(k)  # speculation hit: zero I/O
-            else:
-                if q == 1:
-                    red = run_pass(k)
-                else:
-                    # One sweep scores the needed column plus the top
-                    # q-1 remaining candidates by the CURRENT objective —
-                    # the same lazy-greedy bet that objectives shift
-                    # slowly between folds.  Short batches pad by
-                    # repeating the last column so the accumulate keeps
-                    # one compiled shape per q.
-                    cols = [k]
-                    for j in np.argsort(-g, kind="stable"):
-                        if len(cols) == q:
-                            break
-                        j = int(j)
-                        if mask[j] or j in pending or g[j] == _NEG_INF:
-                            continue
-                        cols.append(j)
-                    padded = cols + [cols[-1]] * (q - len(cols))
-                    reds = run_pass(padded, batch=q)
-                    for i, c in enumerate(cols):
-                        pending[c] = (
-                            {k2: v[i] for k2, v in reds.items()}
-                            if isinstance(reds, dict)
-                            else reds[i]
-                        )
-                    red = pending.pop(k)
-            terms = (
-                {k2: jnp.asarray(v) for k2, v in red.items()}
-                if isinstance(red, dict)
-                else jnp.asarray(red)
-            )
-            cstate = crit.update(cstate, terms, l)
+        rel, selected, gains = _greedy_select(run_pass, crit, n, num_select, q)
     finally:
         if reader is not None:
             reader.close()
@@ -581,9 +635,269 @@ def mrmr_streaming(
     )
 
 
+def _mrmr_streaming_multihost(
+    source,
+    num_select: int,
+    score: ScoreFn,
+    *,
+    spec: HostShardSpec,
+    coll: "HostCollectives | None",
+    block_obs: int,
+    mesh: Mesh | None,
+    obs_axes,
+    feat_axes,
+    prefetch: int,
+    crit: Criterion,
+    q: int,
+    spill_dir: str | None,
+    spill_budget_bytes: int | None,
+    readahead: int,
+) -> MRMRResult:
+    """The cross-host fit: this process reads ONLY its shard, the per-pass
+    reduce is an explicit collective, and every host runs the identical
+    greedy loop on identical merged vectors.
+
+    The paper's two partitionings map onto the host grid exactly as they
+    map onto the device mesh:
+
+    * **tall** (``grid=(H, 1)``): each host streams its row window at
+      full width and accumulates a full-width statistics state; one
+      ``psum`` of the exact integer counts reconstructs the global state
+      bitwise on every host before finalize — scores (hence picks) are
+      identical to one process having read everything.
+    * **wide** (``grid=(1, H)``): each host streams every row of its own
+      column group; states never merge (each host already saw all rows).
+      Finalised per-column scores scatter-``assemble`` into the full
+      ``(N,)`` vector (one non-zero addend per column — float adds
+      against zeros, exact).  Redundancy targets a host doesn't own ride
+      as *appended columns*: a synchronous single-column shard stream
+      aligned block-for-block with the main stream, so the augmented
+      state is ``local_cols + t`` wide and targets always live at local
+      indices ``local_cols..local_cols+t-1``.
+    * **2-D grid**: both — ``psum_obs`` collapses the row partitions
+      (column groups padded to the widest, zeros are the additive
+      identity), then the ``obs_coord == 0`` row of hosts assembles.
+
+    Per-host device placement still applies *within* each process
+    (``mesh``/``obs_axes`` shard the local block over local devices), but
+    column-partitioned regimes force ``feat_axes=()`` per host: with no
+    device feature-sharding the placer's padded width equals the exact
+    shard width, which is what makes cross-host state shapes align
+    deterministically regardless of local device count.
+    """
+    n = source.num_features
+    if (spec.num_obs, spec.num_features) != (source.num_obs, n):
+        raise ValueError(
+            f"HostShardSpec geometry {(spec.num_obs, spec.num_features)} "
+            f"does not match the source {(source.num_obs, n)}"
+        )
+    if spec.partitions_obs and not score.supports_state_merge:
+        raise ValueError(
+            f"{type(score).__name__} statistics cannot merge across row "
+            "partitions (supports_state_merge=False): its state is not a "
+            "plain sum over blocks.  Use an MI score, or a column-only "
+            "host grid (grid=(1, H)) where no state merge is needed."
+        )
+    if spec.partitions_cols and feat_axes:
+        raise ValueError(
+            "column-partitioned multi-host fits require feat_axes=() per "
+            "host: device feature-sharding would pad the statistics width "
+            "past the exact shard width and break cross-host alignment"
+        )
+    if isinstance(source, BlockCacheSource):
+        raise ValueError(
+            "pass spill_dir= instead of a pre-wrapped BlockCacheSource: "
+            "multi-host fits spill per-host shard streams under a "
+            "process-namespaced entry"
+        )
+    if coll is None:
+        coll = HostCollectives(spec)
+    needs_cond = crit.needs_redundancy and crit.needs_conditional_redundancy
+    (clo, _chi) = spec.col_range
+    n_local = spec.local_cols
+
+    # Each host's block stream: ONLY its row/column windows.  Spill (when
+    # asked) caches the shard stream under a per-process namespace, so
+    # hosts sharing one filesystem can never race each other's chunks.
+    shard_src = ShardSource(source, spec.obs_range, spec.col_range)
+    stream_src: DataSource = shard_src
+    spill: BlockCacheSource | None = None
+    if spill_dir is not None:
+        spill = BlockCacheSource(
+            shard_src,
+            spill_dir,
+            budget_bytes=spill_budget_bytes,
+            namespace=f"h{spec.host_id}",
+        )
+        stream_src = spill
+
+    # Tall hosts hold every column; column-partitioned hosts size their
+    # placer (and state) to the exact shard width (feat_axes=() makes
+    # padded_features == num_features, asserted by the placer contract).
+    width_rel = n_local if spec.partitions_cols else n
+    placer_rel = BlockPlacer(
+        block_obs, mesh, obs_axes, feat_axes, num_features=width_rel
+    )
+    eff_bo = placer_rel.block_obs
+    _red_placers: dict = {}
+
+    def red_placer(aug: int) -> BlockPlacer:
+        p = _red_placers.get(aug)
+        if p is None:
+            p = BlockPlacer(
+                block_obs, mesh, obs_axes, (), num_features=n_local + aug
+            )
+            _red_placers[aug] = p
+        return p
+
+    def aug_blocks(raw, cols):
+        """Append each target column's codes for this host's row window
+        to every raw block: owned columns slice out of the block itself,
+        non-owned ones ride a synchronous single-column shard stream off
+        the base source (same ``eff_bo``, same row window — aligned
+        block-for-block by construction, and checked)."""
+        plans, streams = [], []
+        try:
+            for c in cols:
+                c = int(c)
+                if spec.owns_col(c):
+                    plans.append(("own", c - clo))
+                else:
+                    it = source.iter_shard_blocks(
+                        eff_bo, spec.obs_range, (c, c + 1)
+                    )
+                    plans.append(("stream", it))
+                    streams.append(it)
+            for X_blk, y_blk in raw:
+                X_blk = np.asarray(X_blk)
+                extra = []
+                for kind, v in plans:
+                    if kind == "own":
+                        extra.append(X_blk[:, v : v + 1])
+                    else:
+                        Xc, _ = next(v)
+                        if Xc.shape[0] != X_blk.shape[0]:
+                            raise RuntimeError(
+                                "target-column stream misaligned with the "
+                                f"shard stream ({Xc.shape[0]} vs "
+                                f"{X_blk.shape[0]} rows)"
+                            )
+                        extra.append(np.asarray(Xc))
+                yield np.concatenate([X_blk] + extra, axis=1), y_blk
+        finally:
+            for it in streams:
+                close = getattr(it, "close", None)
+                if close is not None:
+                    close()
+
+    io = _PassIO()
+    reader: CrossPassReader | None = None
+    if readahead > 0:
+        max_passes = num_select if crit.needs_redundancy else 1
+        reader = CrossPassReader(
+            lambda: stream_src.iter_blocks(eff_bo),
+            depth=readahead,
+            max_passes=max_passes,
+        )
+        next_raw = reader.next_pass
+        prefetch = 0
+    else:
+        next_raw = lambda: stream_src.iter_blocks(eff_bo)
+
+    def run_pass(target_cols, batch=None):
+        cond = needs_cond and target_cols is not None
+        if target_cols is None or not spec.partitions_cols:
+            # Relevance everywhere, and tall-regime redundancy: every
+            # column is local, so global target ids index the block.
+            placer, raw, local_targets, aug = (
+                placer_rel, next_raw(), target_cols, 0
+            )
+        else:
+            cols = (
+                [int(target_cols)]
+                if batch is None
+                else [int(c) for c in target_cols]
+            )
+            aug = len(cols)
+            placer = red_placer(aug)
+            local_targets = (
+                n_local
+                if batch is None
+                else list(range(n_local, n_local + aug))
+            )
+            raw = aug_blocks(next_raw(), cols)
+        merge = None
+        if spec.partitions_obs:
+            if not spec.partitions_cols:
+                merge = coll.psum
+            else:
+                fa = 0 if batch is None else 1
+                lw, pt = n_local + aug, spec.max_col_width + aug
+                merge = lambda st: coll.psum_obs(
+                    st, feat_axis=fa, local_width=lw, pad_to=pt
+                )
+        acc = _cached_acc_fn(score, placer, mesh, batch=batch)
+        res = _score_pass(
+            raw, stream_src, score, acc, placer, local_targets, prefetch,
+            io, None, batch, conditional=cond, merge_state=merge,
+            keep=n_local if spec.partitions_cols else n,
+        )
+        return coll.assemble(res) if spec.partitions_cols else res
+
+    try:
+        rel, selected, gains = _greedy_select(run_pass, crit, n, num_select, q)
+    finally:
+        if reader is not None:
+            reader.close()
+    io_report = io.as_dict()
+    if spill is not None:
+        io_report["cache"] = dict(spill.counters)
+    io_report["host"] = dict(
+        id=spec.host_id,
+        grid=list(spec.grid),
+        obs_range=list(spec.obs_range),
+        col_range=list(spec.col_range),
+    )
+    # Exact cross-host ledger exchange (int64 as two int32 halves — byte
+    # counts must not round): per-host rows plus the cluster aggregate.
+    per = coll.allgather_counts(
+        [io.passes, io.blocks_read, io.bytes_read, io.state_bytes]
+    )
+    names = ("passes", "blocks_read", "bytes_read", "state_bytes")
+    io_report["hosts"] = dict(
+        grid=list(spec.grid),
+        per_host=[
+            {k: int(v) for k, v in zip(names, row)} for row in per
+        ],
+        aggregate=dict(
+            # Passes run in lockstep (max == every host); the rest sum.
+            passes=int(per[:, 0].max()),
+            blocks_read=int(per[:, 1].sum()),
+            bytes_read=int(per[:, 2].sum()),
+            state_bytes=int(per[:, 3].sum()),
+        ),
+    )
+    return MRMRResult(
+        selected=jnp.asarray(selected),
+        gains=jnp.asarray(gains),
+        relevance=jnp.asarray(rel),
+        criterion=crit.name,
+        engine="streaming",
+        io=io_report,
+    )
+
+
 @register_engine("streaming")
 def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
     del y  # targets come from the source's blocks
+    shards = None
+    if getattr(plan, "hosts", 1) > 1:
+        from repro.dist.multihost import resolve_host_shards
+
+        shards = resolve_host_shards(
+            source.num_obs, source.num_features, plan.hosts,
+            jax.process_index(),
+        )
     return mrmr_streaming(
         source,
         num_select,
@@ -598,4 +912,5 @@ def _fit_streaming(source, y, *, num_select, plan, mesh) -> MRMRResult:
         spill_dir=plan.spill_dir,
         spill_budget_bytes=plan.spill_budget_bytes,
         readahead=plan.readahead,
+        shards=shards,
     )

@@ -97,6 +97,13 @@ class BlockCacheSource(DataSource):
         freshly completed entry pushes the total over, the least recently
         replayed entries are evicted (never the one just written).
         ``None`` = unbounded.
+      namespace: extra entry-key segment for writers that must never share
+        an entry even at identical content — multi-host fits pass their
+        process index (``"h0"``, ``"h1"``, ...) so hosts on one shared
+        filesystem can never race each other's chunks or manifests (shard
+        windows already make the *fingerprints* distinct; the namespace
+        makes disjointness a contract rather than a property of the
+        wrapped source).
 
     Counters (:attr:`counters`) record the parse-vs-replay split so I/O
     savings are measurable, not guessed: ``parse_passes``/``parsed_bytes``
@@ -107,6 +114,7 @@ class BlockCacheSource(DataSource):
     base: DataSource
     cache_dir: str
     budget_bytes: int | None = None
+    namespace: str = ""
 
     def __post_init__(self):
         if not isinstance(self.base, DataSource):
@@ -120,6 +128,13 @@ class BlockCacheSource(DataSource):
             raise ValueError(
                 f"budget_bytes must be positive or None, got "
                 f"{self.budget_bytes}"
+            )
+        if self.namespace and not all(
+            c.isalnum() or c in "-_." for c in self.namespace
+        ):
+            raise ValueError(
+                f"namespace {self.namespace!r} must be filesystem-safe "
+                "(alphanumerics, '-', '_', '.')"
             )
         # Encoded spill dtype: known without I/O only for binned bases
         # (codes live in [0, bins)); everything else spills as-is.
@@ -158,8 +173,9 @@ class BlockCacheSource(DataSource):
     # -- entry layout ----------------------------------------------------
 
     def _entry_dir(self, block_obs: int) -> str:
+        ns = f"-{self.namespace}" if self.namespace else ""
         return os.path.join(
-            self.cache_dir, f"{self.fingerprint()[:32]}-b{int(block_obs)}"
+            self.cache_dir, f"{self.fingerprint()[:32]}-b{int(block_obs)}{ns}"
         )
 
     def _chunk_paths(self, entry: str, i: int) -> tuple[str, str]:

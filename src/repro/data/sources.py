@@ -153,6 +153,49 @@ class DataSource:
             h.update(str(y.dtype).encode())
             h.update(np.ascontiguousarray(y).tobytes())
 
+    # -- shard-restricted iteration (multi-host map) --------------------
+
+    def iter_shard_blocks(
+        self,
+        block_obs: int,
+        obs_range: "tuple | None" = None,
+        col_range: "tuple | None" = None,
+    ) -> Iterator[Block]:
+        """Yield blocks covering only ``rows[obs_range] × cols[col_range]``
+        — the multi-host map step, where each host walks its own shard.
+
+        The default walks :meth:`iter_blocks` and slices, stopping early
+        once past the row window (so a host partitioned to the first half
+        of a file never reads the second half through a row-ordered
+        source); array-backed sources override with direct slicing that
+        touches only the window's bytes.  Blocks are re-chunked to exactly
+        ``block_obs`` rows so shard streams are block-size deterministic
+        like everything else.
+        """
+        olo, ohi = obs_range if obs_range is not None else (0, self.num_obs)
+        clo, chi = col_range if col_range is not None else (0, self.num_features)
+        whole_cols = (clo, chi) == (0, self.num_features)
+
+        def windowed() -> Iterator[Block]:
+            off = 0
+            it = self.iter_blocks(block_obs)
+            try:
+                for X, y in it:
+                    n = X.shape[0]
+                    if off >= ohi:
+                        break
+                    lo, hi = max(olo - off, 0), min(ohi - off, n)
+                    if lo < hi:
+                        Xs = X[lo:hi] if whole_cols else X[lo:hi, clo:chi]
+                        yield np.ascontiguousarray(Xs), y[lo:hi]
+                    off += n
+            finally:
+                close = getattr(it, "close", None)
+                if close is not None:
+                    close()  # release file handles promptly (CSVSource)
+
+        yield from _rechunked(windowed(), block_obs)
+
     # -- derived conveniences -------------------------------------------
 
     def stats(self, block_obs: int = 65536) -> SourceStats:
@@ -296,6 +339,23 @@ class ArraySource(DataSource):
             # and independent of the backing store, so consumers that
             # retain them never pin a memmapped file.
             yield np.array(self.X[lo:hi]), np.array(self.y[lo:hi])
+
+    def iter_shard_blocks(
+        self,
+        block_obs: int,
+        obs_range: "tuple | None" = None,
+        col_range: "tuple | None" = None,
+    ) -> Iterator[Block]:
+        # Direct window slicing: a memmapped host never faults in pages
+        # outside its shard (the default walks every leading block).
+        olo, ohi = obs_range if obs_range is not None else (0, self.num_obs)
+        clo, chi = col_range if col_range is not None else (0, self.num_features)
+        for lo in range(olo, ohi, block_obs):
+            hi = min(lo + block_obs, ohi)
+            yield (
+                np.ascontiguousarray(self.X[lo:hi, clo:chi]),
+                np.array(self.y[lo:hi]),
+            )
 
 
 class NpySource(ArraySource):
@@ -590,6 +650,75 @@ class ArrowSource(_ColumnarSource):
             yield self._block_of(self.table.slice(lo, block_obs))
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardSource(DataSource):
+    """A window of another source, presented as a complete source.
+
+    The multi-host engine wraps each host's base source in one of these
+    (ranges from ``HostShardSpec``), so every downstream consumer —
+    placer, spill cache, read-ahead, binning — sees an ordinary
+    ``num_obs × num_features`` source and streams only the shard's
+    bytes.  The fingerprint folds the window into the base identity, so
+    different hosts' spill caches for the same file never collide even
+    before explicit namespacing.
+    """
+
+    base: DataSource
+    obs_range: tuple
+    col_range: tuple
+
+    def __post_init__(self):
+        olo, ohi = self.obs_range
+        clo, chi = self.col_range
+        if not (0 <= olo < ohi <= self.base.num_obs):
+            raise ValueError(
+                f"obs_range {self.obs_range} outside 0..{self.base.num_obs}"
+            )
+        if not (0 <= clo < chi <= self.base.num_features):
+            raise ValueError(
+                f"col_range {self.col_range} outside "
+                f"0..{self.base.num_features}"
+            )
+
+    @property
+    def num_obs(self) -> int:
+        return self.obs_range[1] - self.obs_range[0]
+
+    @property
+    def num_features(self) -> int:
+        return self.col_range[1] - self.col_range[0]
+
+    @property
+    def feature_dtype(self) -> "np.dtype | None":
+        return self.base.feature_dtype
+
+    def _fingerprint_update(self, h) -> None:
+        h.update(
+            f"shard|{self.base.fingerprint()}|"
+            f"{self.obs_range}|{self.col_range}".encode()
+        )
+
+    def iter_blocks(self, block_obs: int) -> Iterator[Block]:
+        yield from self.base.iter_shard_blocks(
+            block_obs, self.obs_range, self.col_range
+        )
+
+    def iter_shard_blocks(
+        self,
+        block_obs: int,
+        obs_range: "tuple | None" = None,
+        col_range: "tuple | None" = None,
+    ) -> Iterator[Block]:
+        # Compose windows so nested sharding hits the base directly.
+        olo, ohi = obs_range if obs_range is not None else (0, self.num_obs)
+        clo, chi = col_range if col_range is not None else (0, self.num_features)
+        yield from self.base.iter_shard_blocks(
+            block_obs,
+            (self.obs_range[0] + olo, self.obs_range[0] + ohi),
+            (self.col_range[0] + clo, self.col_range[0] + chi),
+        )
+
+
 def _all_numeric(fields) -> bool:
     try:
         [float(v) for v in fields]
@@ -701,6 +830,7 @@ __all__ = [
     "DataSource",
     "NpySource",
     "ParquetSource",
+    "ShardSource",
     "SourceStats",
     "SyntheticTokenSource",
     "as_source",

@@ -47,6 +47,48 @@ def make_mesh(
     return Mesh(np.asarray(devices).reshape(shape), axes)
 
 
+def host_mesh(
+    shape: Sequence[int] | None = None,
+    axes: Sequence[str] = ("hosts",),
+    *,
+    devices=None,
+) -> Mesh:
+    """A global mesh with ONE representative device per process.
+
+    Cross-host collectives over host-local sufficient statistics only
+    need one device per host (the statistics already live on a single
+    local device); the mesh must place process ``p`` at row-major mesh
+    position ``p`` so shard coordinates equal mesh coordinates.
+    ``jax.make_mesh`` may reorder devices for transfer performance,
+    which would silently break that mapping — hence the raw ``Mesh``
+    constructor here.
+
+    Args:
+      shape: extent per axis (default ``(num_processes,)``); must
+        multiply out to the process count.
+      axes: axis name per extent.
+      devices: override the representative devices (tests); default is
+        the lowest-id device of each process, ordered by process index.
+    """
+    if devices is None:
+        by_proc: dict[int, object] = {}
+        for d in jax.devices():
+            p = d.process_index
+            if p not in by_proc or d.id < by_proc[p].id:
+                by_proc[p] = d
+        devices = [by_proc[p] for p in sorted(by_proc)]
+    devices = list(devices)
+    if shape is None:
+        shape = (len(devices),)
+    shape, axes = tuple(int(s) for s in shape), tuple(axes)
+    if math.prod(shape) != len(devices):
+        raise ValueError(
+            f"host mesh shape {dict(zip(axes, shape))} needs "
+            f"{math.prod(shape)} hosts, have {len(devices)}"
+        )
+    return Mesh(np.asarray(devices, dtype=object).reshape(shape), axes)
+
+
 def factor_mesh(n_devices: int, *, bias: float = 1.0) -> tuple[int, int]:
     """Split ``n_devices`` into a 2-D grid ``(a, b)``, ``a*b == n_devices``.
 

@@ -7,6 +7,15 @@ place, so a crash mid-write can never corrupt the latest checkpoint.
 Restore takes a *target sharding tree*, so a checkpoint written on one mesh
 restores onto any other (elastic re-shard): arrays are assembled host-side
 and re-``device_put`` under the new sharding.
+
+Multi-process discipline (checkpoint dirs are usually on a shared
+filesystem): every process publishes ONLY its own ``proc_<i>.npz``
+(written to a private name, ``os.replace``d into the step's tmp dir), and
+process 0 alone — after polling for every shard — writes the manifest,
+swaps the tmp dir into place and garbage-collects.  Before this split,
+every process raced the same ``rmtree(final); os.replace(tmp, final)``
+sequence: the loser's ``rmtree`` could delete the winner's just-published
+checkpoint and its ``replace`` then fail on the vanished tmp.
 """
 
 from __future__ import annotations
@@ -15,6 +24,7 @@ import json
 import os
 import shutil
 import threading
+import time
 from concurrent.futures import ThreadPoolExecutor
 
 import jax
@@ -38,13 +48,40 @@ def _flatten_with_paths(tree):
 class CheckpointManager:
     """Save/restore TrainState pytrees with retention + async writes."""
 
-    def __init__(self, directory: str, *, keep: int = 3, use_async: bool = True):
+    def __init__(
+        self,
+        directory: str,
+        *,
+        keep: int = 3,
+        use_async: bool = True,
+        process_index: int | None = None,
+        process_count: int | None = None,
+        publish_timeout: float = 300.0,
+    ):
         self.directory = directory
         self.keep = keep
         os.makedirs(directory, exist_ok=True)
         self._pool = ThreadPoolExecutor(max_workers=1) if use_async else None
         self._pending = None
         self._lock = threading.Lock()
+        # Injectable cluster coordinates (tests simulate N writers without
+        # jax.distributed); None defers to jax at write time.
+        self._process_index = process_index
+        self._process_count = process_count
+        self.publish_timeout = publish_timeout
+
+    def _coords(self) -> tuple[int, int]:
+        proc = (
+            jax.process_index()
+            if self._process_index is None
+            else self._process_index
+        )
+        nproc = (
+            jax.process_count()
+            if self._process_count is None
+            else self._process_count
+        )
+        return proc, nproc
 
     # ------------------------------------------------------------------ save
     def save(self, step: int, state) -> None:
@@ -68,11 +105,30 @@ class CheckpointManager:
         final = os.path.join(self.directory, f"step_{step:08d}")
         tmp = final + ".tmp"
         os.makedirs(tmp, exist_ok=True)
-        proc = jax.process_index()
-        np.savez(os.path.join(tmp, f"proc_{proc}.npz"), **flat)
+        proc, nproc = self._coords()
+        # Every process lands ONLY its shard file, atomically (private
+        # name, then os.replace): the coordinator's poll below can never
+        # observe a torn .npz, and no two processes ever write one path.
+        part = os.path.join(tmp, f"proc_{proc}.npz.part")
+        with open(part, "wb") as f:
+            np.savez(f, **flat)
+        os.replace(part, os.path.join(tmp, f"proc_{proc}.npz"))
+        if proc != 0:
+            return  # process 0 alone publishes (manifest, swap, gc)
+        expect = [os.path.join(tmp, f"proc_{i}.npz") for i in range(nproc)]
+        deadline = time.monotonic() + self.publish_timeout
+        while not all(os.path.exists(p) for p in expect):
+            if time.monotonic() >= deadline:
+                missing = [p for p in expect if not os.path.exists(p)]
+                raise TimeoutError(
+                    f"step {step}: {len(missing)}/{nproc} shard files never "
+                    f"arrived within {self.publish_timeout}s "
+                    f"(first missing: {os.path.basename(missing[0])})"
+                )
+            time.sleep(0.05)
         manifest = {
             "step": step,
-            "num_processes": jax.process_count(),
+            "num_processes": nproc,
             "keys": sorted(flat),
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:

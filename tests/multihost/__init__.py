@@ -1,0 +1,2 @@
+# Package marker: mh_grid.py in here is executed as a subprocess by
+# tests/test_multihost.py, never collected by pytest.

@@ -1,0 +1,131 @@
+"""4-process 2x2 host-grid e2e: both-large data, JMI criterion.
+
+Driver mode (no REPRO_PROCESS_ID in the environment) picks a loopback
+coordinator port, spawns four worker copies of this script, computes the
+single-process streaming reference in-process, and exits non-zero unless
+every host committed the exact reference selection and gains.
+
+The 2x2 grid is forced via an explicit ``grid=`` override on
+``resolve_host_shards`` (the automatic rule would need larger data to
+pick it), exercising BOTH collective axes in one run: ``psum_obs`` over
+the observation-host axis merges the row-partitioned pair statistics,
+and ``assemble`` sums the column groups' disjoint finalised slices.
+"""
+
+import json
+import os
+import socket
+import subprocess
+import sys
+
+import numpy as np
+
+ROWS, COLS, SELECT, BLOCK_OBS = 600, 600, 3, 128
+NUM_VALUES, NUM_CLASSES, SEED = 4, 3, 7
+CRITERION = "jmi"
+_MARK = "GRIDRESULT:"
+
+
+def _data():
+    rng = np.random.default_rng(SEED)
+    X = rng.integers(0, NUM_VALUES, (ROWS, COLS)).astype(np.int32)
+    y = rng.integers(0, NUM_CLASSES, (ROWS,)).astype(np.int32)
+    return X, y
+
+
+def _fit(shards=None):
+    from repro.core.scores import MIScore
+    from repro.core.streaming import mrmr_streaming
+    from repro.data.sources import ArraySource
+
+    X, y = _data()
+    res = mrmr_streaming(
+        ArraySource(X, y),
+        SELECT,
+        MIScore(num_values=NUM_VALUES, num_classes=NUM_CLASSES),
+        block_obs=BLOCK_OBS,
+        criterion=CRITERION,
+        shards=shards,
+    )
+    return (
+        np.asarray(res.selected).tolist(),
+        [float(g) for g in np.asarray(res.gains)],
+        res.io,
+    )
+
+
+def worker() -> None:
+    from repro.dist.multihost import init_multihost, resolve_host_shards
+
+    ctx = init_multihost()
+    spec = resolve_host_shards(
+        ROWS, COLS, ctx.num_processes, ctx.process_id, grid=(2, 2)
+    )
+    sel, gains, io = _fit(spec)
+    print(_MARK + json.dumps(
+        dict(pid=ctx.process_id, sel=sel, gains=gains,
+             bytes_read=io["bytes_read"], hosts=io["hosts"])
+    ))
+
+
+def driver() -> int:
+    s = socket.socket()
+    s.bind(("127.0.0.1", 0))
+    port = s.getsockname()[1]
+    s.close()
+    procs = []
+    for pid in range(4):
+        env = dict(
+            os.environ,
+            REPRO_COORDINATOR=f"127.0.0.1:{port}",
+            REPRO_NUM_PROCESSES="4",
+            REPRO_PROCESS_ID=str(pid),
+        )
+        procs.append(subprocess.Popen(
+            [sys.executable, os.path.abspath(__file__)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True,
+        ))
+    results = {}
+    for pid, p in enumerate(procs):
+        out, err = p.communicate(timeout=900)
+        payload = next(
+            (l[len(_MARK):] for l in out.splitlines()
+             if l.startswith(_MARK)),
+            None,
+        )
+        if p.returncode != 0 or payload is None:
+            print(f"worker {pid} failed (rc={p.returncode})\n"
+                  f"{out[-3000:]}\n{err[-3000:]}")
+            return 1
+        results[pid] = json.loads(payload)
+
+    ref_sel, ref_gains, ref_io = _fit()
+    print("reference:", ref_sel, ref_gains)
+    ok = True
+    for pid in range(4):
+        r = results[pid]
+        print(f"host {pid}:", r["sel"], r["gains"],
+              f"bytes_read={r['bytes_read']}")
+        if r["sel"] != ref_sel or r["gains"] != ref_gains:
+            print(f"  MISMATCH vs reference")
+            ok = False
+    agg = results[0]["hosts"]["aggregate"]
+    if results[0]["hosts"]["grid"] != [2, 2]:
+        print("expected a 2x2 host grid, got", results[0]["hosts"]["grid"])
+        ok = False
+    for pid in range(4):
+        # A 2x2 grid means each host streams ~a quarter of the bytes.
+        frac = results[pid]["bytes_read"] / agg["bytes_read"]
+        if not 0.2 <= frac <= 0.3:
+            print(f"host {pid} read fraction {frac:.3f}, expected ~0.25")
+            ok = False
+    print("MATCH" if ok else "MISMATCH")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    if os.environ.get("REPRO_PROCESS_ID"):
+        worker()
+    else:
+        sys.exit(driver())

@@ -1,0 +1,107 @@
+"""CheckpointManager multi-process publish protocol.
+
+Simulates N writers on one shared directory via the injectable
+``process_index``/``process_count`` coordinates (no jax.distributed
+needed): every process atomically lands only its own ``proc_<i>.npz``;
+process 0 alone — once all shards exist — writes the manifest and swaps
+the step into place.
+"""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.runtime.checkpoint import CheckpointManager
+
+
+def _mgr(d, i, n, **kw):
+    return CheckpointManager(
+        str(d), use_async=False, process_index=i, process_count=n, **kw
+    )
+
+
+def test_single_process_save_restore_roundtrip(tmp_path):
+    mgr = _mgr(tmp_path, 0, 1)
+    state = {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+             "step": np.int32(7)}
+    mgr.save(3, state)
+    assert mgr.latest_step() == 3
+    restored = mgr.restore(3, state)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), state["w"])
+    assert int(restored["step"]) == 7
+
+
+def test_nonzero_process_never_publishes(tmp_path):
+    mgr1 = _mgr(tmp_path, 1, 2)
+    mgr1.save(0, {"b": np.ones(3, np.float32)})
+    # Shard landed in the tmp dir; no manifest, no final step, and the
+    # step is invisible to restore-side listings.
+    tmp = tmp_path / "step_00000000.tmp"
+    assert (tmp / "proc_1.npz").exists()
+    assert not (tmp / "manifest.json").exists()
+    assert not (tmp_path / "step_00000000").exists()
+    assert mgr1.all_steps() == []
+
+
+def test_coordinator_publishes_once_all_shards_arrive(tmp_path):
+    a = np.arange(4, dtype=np.float32)
+    b = np.arange(5, dtype=np.float32) * 2
+    _mgr(tmp_path, 1, 2).save(0, {"b": b})
+    _mgr(tmp_path, 0, 2).save(0, {"a": a})
+    final = tmp_path / "step_00000000"
+    assert final.exists() and not (tmp_path / "step_00000000.tmp").exists()
+    assert (final / "proc_0.npz").exists() and (final / "proc_1.npz").exists()
+    # Restore merges the disjoint per-process shard files.
+    restored = _mgr(tmp_path, 0, 2).restore(0, {"a": a * 0, "b": b * 0})
+    np.testing.assert_array_equal(np.asarray(restored["a"]), a)
+    np.testing.assert_array_equal(np.asarray(restored["b"]), b)
+
+
+def test_coordinator_waits_for_straggler_thread(tmp_path):
+    a = np.zeros(2, np.float32)
+    b = np.ones(2, np.float32)
+
+    def late_save():
+        _mgr(tmp_path, 1, 2).save(0, {"b": b})
+
+    t = threading.Timer(0.3, late_save)
+    t.start()
+    try:
+        # Blocks polling until the straggler's shard lands, then publishes.
+        _mgr(tmp_path, 0, 2, publish_timeout=30.0).save(0, {"a": a})
+    finally:
+        t.join()
+    assert (tmp_path / "step_00000000" / "manifest.json").exists()
+    assert _mgr(tmp_path, 0, 2).latest_step() == 0
+
+
+def test_coordinator_times_out_on_missing_shard(tmp_path):
+    with pytest.raises(TimeoutError, match="proc_1.npz"):
+        _mgr(tmp_path, 0, 2, publish_timeout=0.3).save(
+            0, {"a": np.zeros(2, np.float32)}
+        )
+    # Nothing was published — the torn step can never be restored.
+    assert _mgr(tmp_path, 0, 2).all_steps() == []
+
+
+def test_republish_same_step_replaces_cleanly(tmp_path):
+    for val in (1.0, 2.0):
+        arr = np.full(3, val, np.float32)
+        _mgr(tmp_path, 1, 2).save(5, {"b": arr})
+        _mgr(tmp_path, 0, 2).save(5, {"a": arr})
+    restored = _mgr(tmp_path, 0, 2).restore(
+        5, {"a": np.zeros(3, np.float32), "b": np.zeros(3, np.float32)}
+    )
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.full(3, 2.0))
+    np.testing.assert_array_equal(np.asarray(restored["b"]), np.full(3, 2.0))
+
+
+def test_retention_gc_only_runs_on_coordinator(tmp_path):
+    for step in range(5):
+        _mgr(tmp_path, 1, 2).save(step, {"b": np.zeros(1, np.float32)})
+        _mgr(tmp_path, 0, 2, keep=2).save(step, {"a": np.zeros(1, np.float32)})
+    assert _mgr(tmp_path, 0, 2).all_steps() == [3, 4]
+    # No orphaned tmp dirs linger after publication.
+    assert not [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]

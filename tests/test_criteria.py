@@ -630,3 +630,100 @@ class TestSelectorReadSide:
             from repro.core import selector as selector_mod
 
             selector_mod._ENGINES.pop("_test_stub_crit", None)
+
+
+class TestSummedFoldCriteria:
+    """MIFS/CIFE/ICAP: the un-normalised-sum family (Brown et al.'s
+    unified frame at β=γ=1) — fold formulas, registry, and engine
+    agreement including streaming."""
+
+    def test_mifs_is_summed_redundancy(self):
+        from repro import MIFSCriterion
+
+        crit = MIFSCriterion()
+        assert crit.needs_redundancy
+        assert not crit.needs_conditional_redundancy
+        rel = jnp.asarray([1.0, 2.0, 3.0])
+        st = crit.init_state(3)
+        st = crit.update(st, jnp.asarray([0.5, 1.0, 0.0]), 0)
+        st = crit.update(st, jnp.asarray([0.5, 1.0, 0.0]), 1)
+        # Sum, NOT mean: penalty 1.0 / 2.0 / 0.0 (mid would halve it).
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [0.0, 0.0, 3.0]
+        )
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, crit.init_state(3), 0)),
+            np.asarray(rel),
+        )
+
+    def test_cife_is_summed_gap(self):
+        from repro import CIFECriterion
+
+        crit = CIFECriterion()
+        assert crit.needs_conditional_redundancy
+        rel = jnp.asarray([1.0, 2.0])
+        st = crit.init_state(2)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.5, 1.0]),
+                                  conditional=jnp.asarray([1.0, 0.5])), 0)
+        st = crit.update(st, dict(marginal=jnp.asarray([0.0, 1.0]),
+                                  conditional=jnp.asarray([0.5, 0.0])), 1)
+        # gaps (cond - marg): [0.5, -0.5] + [0.5, -1.0], summed not meaned
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [2.0, 0.5]
+        )
+
+    def test_icap_caps_at_zero(self):
+        from repro import ICAPCriterion
+
+        crit = ICAPCriterion()
+        assert crit.needs_conditional_redundancy
+        rel = jnp.asarray([1.0, 2.0])
+        st = crit.init_state(2)
+        # feature 0: class explains the dependence (cond > marg) -> no
+        # penalty; feature 1: unexplained redundancy 0.5 -> penalised.
+        st = crit.update(st, dict(marginal=jnp.asarray([0.5, 1.0]),
+                                  conditional=jnp.asarray([1.0, 0.5])), 0)
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 1)), [1.0, 1.5]
+        )
+        # Synergy never accumulates negative penalty across folds.
+        st = crit.update(st, dict(marginal=jnp.asarray([0.0, 0.0]),
+                                  conditional=jnp.asarray([2.0, 2.0])), 1)
+        np.testing.assert_allclose(
+            np.asarray(crit.objective(rel, st, 2)), [1.0, 1.5]
+        )
+
+    def test_registered(self):
+        names = available_criteria()
+        for name in ("mifs", "cife", "icap"):
+            assert name in names
+            assert resolve_criterion(name).name == name
+
+    @pytest.mark.parametrize("criterion", ["mifs", "cife", "icap"])
+    def test_engines_agree(self, corral, criterion):
+        X, y = corral
+        ref = fit(X, y, "reference", criterion=criterion)
+        for encoding in ALL_ENCODINGS[1:]:
+            got = fit(X, y, encoding, criterion=criterion)
+            np.testing.assert_array_equal(got.selected_, ref.selected_)
+            np.testing.assert_allclose(got.gains_, ref.gains_,
+                                       rtol=5e-3, atol=1e-5)
+
+    @pytest.mark.parametrize("criterion", ["mifs", "cife", "icap"])
+    def test_streaming_matches_reference(self, corral, criterion):
+        X, y = corral
+        ref = fit(X, y, "reference", criterion=criterion)
+        got = MRMRSelector(num_select=5, criterion=criterion,
+                           block_obs=999).fit(ArraySource(X, y))
+        assert got.plan_.encoding == "streaming"
+        np.testing.assert_array_equal(got.selected_, ref.selected_)
+        np.testing.assert_allclose(got.gains_, ref.gains_, rtol=1e-4,
+                                   atol=1e-5)
+
+    def test_mifs_diverges_from_mid_late(self, corral):
+        # The growing un-normalised penalty must actually steer: on the
+        # seed dataset MIFS and mid disagree somewhere in a longer fit.
+        X, y = corral
+        mid = fit(X, y, "reference", L=8, criterion="mid")
+        mifs = fit(X, y, "reference", L=8, criterion="mifs")
+        assert mid.selected_.tolist() != mifs.selected_.tolist()

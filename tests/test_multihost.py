@@ -1,0 +1,383 @@
+"""Multi-host map-reduce: shard resolution, shard-windowed block streams,
+spill namespacing, capability guards, and the 2-/4-process end-to-end
+(selection bitwise-identical to the single-process streaming engine)."""
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core.scores import MIScore, PearsonMIScore, ScoreFn
+from repro.data.binning import BinnedSource
+from repro.data.block_cache import BlockCacheSource
+from repro.data.sources import ArraySource, CorralSource, ShardSource
+from repro.dist.multihost import (
+    HostCollectives,
+    factor_host_grid,
+    resolve_host_shards,
+    split_range,
+)
+
+_HERE = pathlib.Path(__file__).parent
+_SRC = str(_HERE.parent / "src")
+
+
+# ---------------------------------------------------------------------------
+# split_range
+# ---------------------------------------------------------------------------
+
+def test_split_range_covers_contiguously_and_balances():
+    for total in (1, 7, 24, 1024, 10001):
+        for parts in (1, 2, 3, 4, 7):
+            ranges = [split_range(total, parts, i) for i in range(parts)]
+            assert ranges[0][0] == 0 and ranges[-1][1] == total
+            for (_, hi), (lo, _) in zip(ranges, ranges[1:]):
+                assert hi == lo  # contiguous, no gap or overlap
+            widths = [hi - lo for lo, hi in ranges]
+            assert max(widths) - min(widths) <= 1
+
+
+def test_split_range_uneven_and_errors():
+    assert split_range(10001, 2, 0) == (0, 5001)
+    assert split_range(10001, 2, 1) == (5001, 10001)
+    with pytest.raises(ValueError):
+        split_range(10, 2, 2)
+    with pytest.raises(ValueError):
+        split_range(10, 2, -1)
+
+
+# ---------------------------------------------------------------------------
+# resolve_host_shards — the §III rule across hosts
+# ---------------------------------------------------------------------------
+
+def test_tall_partitions_observations():
+    for i, obs in [(0, (0, 3000)), (1, (3000, 6000))]:
+        s = resolve_host_shards(6000, 24, 2, i)
+        assert s.grid == (2, 1)
+        assert s.obs_range == obs and s.col_range == (0, 24)
+        assert s.partitions_obs and not s.partitions_cols
+
+
+def test_wide_partitions_columns():
+    for i, cols in [(0, (0, 512)), (1, (512, 1024))]:
+        s = resolve_host_shards(192, 1024, 2, i)
+        assert s.grid == (1, 2)
+        assert s.obs_range == (0, 192) and s.col_range == cols
+
+
+def test_both_large_gets_2d_grid():
+    for i in range(4):
+        s = resolve_host_shards(5000, 5000, 4, i)
+        assert s.grid == (2, 2)
+        assert s.obs_range == split_range(5000, 2, i // 2)
+        assert s.col_range == split_range(5000, 2, i % 2)
+        assert (s.obs_coord, s.feat_coord) == (i // 2, i % 2)
+    assert factor_host_grid(5000, 5000, 4) == (2, 2)
+
+
+def test_both_large_two_hosts_falls_back_single_axis():
+    # Square data, 2 hosts: no 2-D factorisation (min extent would be 1),
+    # aspect >= 1 biases toward the observation split.
+    s = resolve_host_shards(1200, 1200, 2, 0)
+    assert s.grid == (2, 1)
+
+
+def test_uneven_rows_split():
+    a = resolve_host_shards(10001, 24, 2, 0)
+    b = resolve_host_shards(10001, 24, 2, 1)
+    assert a.obs_range == (0, 5001) and b.obs_range == (5001, 10001)
+    assert a.local_obs - b.local_obs == 1
+
+
+def test_single_host_degenerates_to_full_ranges():
+    s = resolve_host_shards(100, 10, 1, 0)
+    assert s.grid == (1, 1) and s.is_single_host
+    assert s.obs_range == (0, 100) and s.col_range == (0, 10)
+
+
+def test_explicit_grid_override_and_guards():
+    s = resolve_host_shards(6000, 24, 2, 1, grid=(1, 2))
+    assert s.grid == (1, 2) and s.col_range == (12, 24)
+    with pytest.raises(ValueError, match="does not factor"):
+        resolve_host_shards(100, 10, 4, 0, grid=(3, 1))
+    with pytest.raises(ValueError, match="over-partitions"):
+        resolve_host_shards(4, 10, 8, 0, grid=(8, 1))
+    with pytest.raises(ValueError):
+        resolve_host_shards(100, 10, 2, 2)  # host_id out of range
+
+
+def test_spec_column_ownership_and_ragged_width():
+    s = resolve_host_shards(30, 10, 3, 1, grid=(1, 3))
+    # 10 cols over 3 hosts: widths 4, 3, 3; group 0 is the widest.
+    assert s.col_range == (4, 7) and s.max_col_width == 4
+    assert s.owns_col(4) and s.owns_col(6) and not s.owns_col(7)
+
+
+# ---------------------------------------------------------------------------
+# shard-windowed block streams
+# ---------------------------------------------------------------------------
+
+def _materialize(it):
+    xs, ys = zip(*it)
+    return np.concatenate(xs), np.concatenate(ys)
+
+
+def test_array_source_shard_blocks_match_numpy_windows():
+    rng = np.random.default_rng(0)
+    X = rng.integers(0, 5, (101, 12)).astype(np.int32)
+    y = rng.integers(0, 3, (101,)).astype(np.int32)
+    src = ArraySource(X, y)
+    for bo in (7, 32, 200):
+        for obs, cols in [((0, 50), (0, 12)), ((13, 88), (3, 9)),
+                          ((50, 101), (11, 12))]:
+            Xw, yw = _materialize(src.iter_shard_blocks(bo, obs, cols))
+            np.testing.assert_array_equal(Xw, X[slice(*obs), slice(*cols)])
+            np.testing.assert_array_equal(yw, y[slice(*obs)])
+
+
+def test_generic_source_shard_blocks_match_full_stream():
+    # CorralSource has no override, so this exercises the DataSource
+    # default: walk iter_blocks, slice the window, early-stop past it.
+    src = CorralSource(500, 16, seed=3)
+    Xf, yf = _materialize(src.iter_blocks(64))
+    Xw, yw = _materialize(src.iter_shard_blocks(64, (100, 317), (4, 11)))
+    np.testing.assert_array_equal(Xw, Xf[100:317, 4:11])
+    np.testing.assert_array_equal(yw, yf[100:317])
+
+
+def test_binned_source_shard_blocks_use_global_edges():
+    rng = np.random.default_rng(1)
+    X = rng.normal(size=(300, 8)).astype(np.float32)
+    y = rng.integers(0, 2, (300,)).astype(np.int32)
+    binned = BinnedSource(ArraySource(X, y), bins=4, fit_block_obs=64)
+    Xf, _ = _materialize(binned.iter_blocks(64))
+    Xw, yw = _materialize(binned.iter_shard_blocks(64, (50, 250), (2, 6)))
+    # Window codes must come from edges fitted on the FULL data — a
+    # shard-fitted binner would disagree with the single-host encode.
+    np.testing.assert_array_equal(Xw, Xf[50:250, 2:6])
+
+
+def test_shard_source_is_a_real_source():
+    rng = np.random.default_rng(2)
+    X = rng.integers(0, 4, (80, 10)).astype(np.int32)
+    y = rng.integers(0, 2, (80,)).astype(np.int32)
+    base = ArraySource(X, y)
+    shard = ShardSource(base, (10, 60), (2, 8))
+    assert (shard.num_obs, shard.num_features) == (50, 6)
+    Xs, ys = _materialize(shard.iter_blocks(16))
+    np.testing.assert_array_equal(Xs, X[10:60, 2:8])
+    # Nested windows compose (offsets resolve into the base).
+    Xn, _ = _materialize(shard.iter_shard_blocks(16, (5, 25), (1, 4)))
+    np.testing.assert_array_equal(Xn, X[15:35, 3:6])
+    # Distinct windows are distinct content addresses, none the base's.
+    other = ShardSource(base, (10, 60), (0, 8))
+    prints = {base.fingerprint(), shard.fingerprint(), other.fingerprint()}
+    assert len(prints) == 3
+
+
+# ---------------------------------------------------------------------------
+# spill-cache namespacing (satellite: concurrent multi-host writers)
+# ---------------------------------------------------------------------------
+
+def test_block_cache_namespace_validated(tmp_path):
+    src = ArraySource(np.zeros((4, 2), np.int32), np.zeros((4,), np.int32))
+    with pytest.raises(ValueError, match="filesystem-safe"):
+        BlockCacheSource(src, str(tmp_path), namespace="h0/evil")
+
+
+def test_block_cache_namespaces_isolate_concurrent_writers(tmp_path):
+    rng = np.random.default_rng(4)
+    X = rng.integers(0, 4, (120, 8)).astype(np.int32)
+    y = rng.integers(0, 2, (120,)).astype(np.int32)
+    base = ArraySource(X, y)
+    shards = [ShardSource(base, split_range(120, 2, i), (0, 8))
+              for i in range(2)]
+    caches = [
+        BlockCacheSource(s, str(tmp_path), namespace=f"h{i}")
+        for i, s in enumerate(shards)
+    ]
+    errors = []
+
+    def stage(c):
+        try:
+            for _ in c.iter_blocks(32):
+                pass
+        except Exception as e:  # pragma: no cover - failure reporting
+            errors.append(e)
+
+    threads = [threading.Thread(target=stage, args=(c,)) for c in caches]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    entries = sorted(os.listdir(tmp_path))
+    assert len(entries) == 2
+    assert {e.rsplit("-", 1)[1] for e in entries} == {"h0", "h1"}
+    # Both replay their own entry with the right content.
+    for i, c in enumerate(caches):
+        Xr, _ = _materialize(c.iter_blocks(32))
+        np.testing.assert_array_equal(Xr, X[slice(*split_range(120, 2, i))])
+        assert c.counters["replay_passes"] == 1
+
+
+# ---------------------------------------------------------------------------
+# capability flags and guards
+# ---------------------------------------------------------------------------
+
+def test_state_merge_capability_flags():
+    assert ScoreFn.supports_state_merge is False
+    assert MIScore.supports_state_merge is True
+    assert PearsonMIScore.supports_state_merge is False
+
+
+def test_obs_partitioned_multihost_rejects_unmergeable_score():
+    from repro.core.streaming import mrmr_streaming
+
+    rng = np.random.default_rng(5)
+    X = rng.normal(size=(100, 8)).astype(np.float32)
+    y = rng.integers(0, 2, (100,)).astype(np.int32)
+    spec = resolve_host_shards(100, 8, 2, 0, grid=(2, 1))
+    with pytest.raises(ValueError, match="supports_state_merge"):
+        mrmr_streaming(
+            ArraySource(X, y), 2, PearsonMIScore(), shards=spec
+        )
+
+
+def test_col_partitioned_multihost_rejects_device_feat_axes():
+    from repro.core.streaming import mrmr_streaming
+
+    rng = np.random.default_rng(6)
+    X = rng.integers(0, 3, (40, 12)).astype(np.int32)
+    y = rng.integers(0, 2, (40,)).astype(np.int32)
+    spec = resolve_host_shards(40, 12, 2, 0, grid=(1, 2))
+    with pytest.raises(ValueError, match="feat_axes"):
+        mrmr_streaming(
+            ArraySource(X, y), 2, MIScore(num_values=3, num_classes=2),
+            feat_axes=("model",), shards=spec,
+        )
+
+
+def test_multihost_rejects_geometry_mismatch_and_prewrapped_cache(tmp_path):
+    from repro.core.streaming import mrmr_streaming
+
+    rng = np.random.default_rng(7)
+    X = rng.integers(0, 3, (40, 12)).astype(np.int32)
+    y = rng.integers(0, 2, (40,)).astype(np.int32)
+    score = MIScore(num_values=3, num_classes=2)
+    bad_spec = resolve_host_shards(41, 12, 2, 0, grid=(1, 2))
+    with pytest.raises(ValueError, match="does not match the source"):
+        mrmr_streaming(ArraySource(X, y), 2, score, shards=bad_spec)
+    spec = resolve_host_shards(40, 12, 2, 0, grid=(1, 2))
+    cached = BlockCacheSource(ArraySource(X, y), str(tmp_path))
+    with pytest.raises(ValueError, match="spill_dir"):
+        mrmr_streaming(cached, 2, score, shards=spec)
+
+
+def test_selector_hosts_validation():
+    from repro.core.selector import MRMRSelector
+
+    X = np.zeros((10, 4), np.int32)
+    y = np.zeros((10,), np.int32)
+    with pytest.raises(ValueError, match="hosts"):
+        MRMRSelector(num_select=2, hosts=0).fit(ArraySource(X, y))
+    with pytest.raises(ValueError, match="streaming"):
+        MRMRSelector(num_select=2, hosts=2).fit(X, y)
+
+
+def test_single_host_collectives_are_identity():
+    spec = resolve_host_shards(100, 10, 1, 0)
+    coll = HostCollectives(spec)
+    tree = dict(a=np.arange(6).reshape(2, 3))
+    assert coll.psum(tree) is tree
+    assert coll.psum_obs(tree) is tree
+    assert coll.assemble(tree) is tree
+    counts = coll.allgather_counts([5, 2**40])
+    np.testing.assert_array_equal(counts, [[5, 2**40]])
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: N jax.distributed processes vs the single-process engine
+# ---------------------------------------------------------------------------
+
+def _launch(extra, timeout=600):
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.launch.select_multihost",
+         "--num-processes", "2", *extra],
+        capture_output=True, text=True, timeout=timeout,
+        env={**os.environ, "PYTHONPATH": _SRC},
+    )
+    if proc.returncode != 0:
+        pytest.fail(
+            f"launcher failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
+    return json.loads(proc.stdout.splitlines()[-1])
+
+
+def _reference(rows, cols, select, **kw):
+    from repro.core.selector import MRMRSelector
+    from repro.data.synthetic import corral_dataset_np
+
+    X, y = corral_dataset_np(rows, cols, seed=0)
+    sel = MRMRSelector(
+        num_select=select,
+        score=MIScore(num_values=2, num_classes=2),
+        **kw,
+    ).fit(ArraySource(X, y))
+    return sel.selected_.tolist(), [float(g) for g in sel.gains_]
+
+
+@pytest.mark.slow
+def test_multihost_e2e_tall_matches_single_process():
+    out = _launch(["--rows", "6000", "--cols", "24", "--select", "4",
+                   "--block-obs", "1500"])
+    ref_sel, ref_gains = _reference(6000, 24, 4, block_obs=1500)
+    assert out["selected"] == ref_sel
+    assert out["gains"] == ref_gains          # bitwise, not approximate
+    assert out["hosts"]["grid"] == [2, 1]
+    agg = out["hosts"]["aggregate"]
+    for h in out["hosts"]["per_host"]:
+        # Each host reads its half of the rows, nothing more.
+        assert 0.45 <= h["bytes_read"] / agg["bytes_read"] <= 0.55
+
+
+@pytest.mark.slow
+def test_multihost_e2e_wide_spill_batched_matches_single_process(tmp_path):
+    spill = str(tmp_path / "spill")
+    out = _launch(["--rows", "192", "--cols", "1024", "--select", "4",
+                   "--block-obs", "64", "--batch-candidates", "2",
+                   "--spill-dir", spill])
+    ref_sel, ref_gains = _reference(
+        192, 1024, 4, block_obs=64, batch_candidates=2,
+    )
+    assert out["selected"] == ref_sel
+    assert out["gains"] == ref_gains
+    assert out["hosts"]["grid"] == [1, 2]
+    agg = out["hosts"]["aggregate"]
+    for h in out["hosts"]["per_host"]:
+        assert 0.4 <= h["bytes_read"] / agg["bytes_read"] <= 0.6
+    # Spill entries are disjoint per process: shard fingerprints AND the
+    # explicit h<i> namespace.
+    entries = sorted(os.listdir(spill))
+    assert len(entries) == 2
+    assert {e.rsplit("-", 1)[1] for e in entries} == {"h0", "h1"}
+
+
+@pytest.mark.slow
+def test_multihost_e2e_2d_grid_matches_single_process():
+    proc = subprocess.run(
+        [sys.executable, str(_HERE / "multihost" / "mh_grid.py")],
+        capture_output=True, text=True, timeout=900,
+        env={**os.environ, "PYTHONPATH": _SRC},
+    )
+    if proc.returncode != 0:
+        pytest.fail(
+            f"mh_grid.py failed\n--- stdout ---\n{proc.stdout[-4000:]}"
+            f"\n--- stderr ---\n{proc.stderr[-4000:]}"
+        )
